@@ -1,0 +1,202 @@
+"""Analytic roofline terms per (arch x shape) cell.
+
+Why analytic: XLA:CPU's ``cost_analysis()`` reports per-device FLOPs with
+**while-loop bodies counted once** (verified by calibration in
+EXPERIMENTS.md §Methodology), and our step functions are scan-structured
+(layers, microbatches, flash-attention blocks), so raw HLO numbers
+undercount by the product of trip counts. The roofline therefore uses
+the standard MFU-style closed forms below; the raw HLO numbers and the
+HLO-parsed collective bytes are recorded alongside as structural
+cross-checks (they catch *missing* sharding: an unexpected all-gather
+shows up immediately).
+
+Hardware constants (TPU v5e-class, per chip):
+  peak 197 TFLOP/s bf16 | 819 GB/s HBM | ~50 GB/s/link ICI (x4 links),
+  inter-pod DCI ~ 25 GB/s/chip-pair-equivalent (2x16x16 mesh).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeSpec
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+__all__ = ["roofline_terms", "active_params", "analytic_flops",
+           "analytic_hbm_bytes", "analytic_collective_bytes",
+           "PEAK_FLOPS", "HBM_BW", "ICI_BW"]
+
+
+def active_params(cfg: ModelConfig) -> float:
+    """Per-token active parameters (MoE: top_k + shared experts only),
+    embeddings excluded (standard 6ND accounting)."""
+    d = cfg.d_model
+    nm = 3 if cfg.mlp_type == "swiglu" else 2
+    n = 0.0
+    for k in cfg.layer_kinds():
+        if k in ("g", "l"):
+            n += d * (cfg.q_dim + 2 * cfg.kv_dim) + cfg.q_dim * d
+            n += nm * d * cfg.d_ff
+        elif k == "m":
+            e = cfg.moe
+            n += d * (cfg.q_dim + 2 * cfg.kv_dim) + cfg.q_dim * d
+            n += (e.top_k + e.n_shared) * nm * d * cfg.d_ff
+            n += d * e.n_experts
+        elif k == "d":
+            n += d * (cfg.q_dim + 2 * cfg.kv_dim) + cfg.q_dim * d
+            n += nm * d * (cfg.moe.d_ff_dense or cfg.d_ff)
+        elif k == "r":
+            if cfg.family == "rwkv":
+                n += 6 * d * d + 2 * d * cfg.d_ff
+            else:
+                n += 5 * d * d + nm * d * cfg.d_ff
+    if cfg.enc_layers:
+        n += cfg.enc_layers * (4 * d * d + 2 * d * cfg.d_ff)
+        n += cfg.n_layers * (2 * d * d + 2 * d * cfg.kv_dim)  # cross-attn
+    return n
+
+
+def total_params(cfg: ModelConfig) -> float:
+    return float(cfg.param_count())
+
+
+def _attn_flops_per_layer(cfg, b, s, ctx, kind) -> float:
+    """Score+PV matmul flops, one layer, forward."""
+    if kind == "l":
+        ctx = min(ctx, cfg.window)
+    return 4.0 * b * s * ctx * cfg.q_dim * 0.5  # causal half
+
+
+def analytic_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    """Global FLOPs for one lowered step (train: fwd+bwd, no remat
+    overhead counted — canonical MFU denominator)."""
+    n_act = active_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        f = 6.0 * n_act * tokens
+        attn = sum(_attn_flops_per_layer(cfg, shape.global_batch,
+                                         shape.seq_len, shape.seq_len, k)
+                   for k in cfg.layer_kinds() if k in ("g", "l", "m", "d"))
+        f += 3.0 * attn
+        f += 6.0 * tokens * cfg.d_model * cfg.vocab_size / 1.0  # lm head
+        return f
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        f = 2.0 * n_act * tokens
+        attn = sum(_attn_flops_per_layer(cfg, shape.global_batch,
+                                         shape.seq_len, shape.seq_len, k)
+                   for k in cfg.layer_kinds() if k in ("g", "l", "m", "d"))
+        f += attn
+        f += 2.0 * tokens * cfg.d_model * cfg.vocab_size
+        return f
+    # decode: one token per sequence against a shape.seq_len cache
+    b = shape.global_batch
+    f = 2.0 * n_act * b
+    for k in cfg.layer_kinds():
+        if k in ("g", "m", "d"):
+            f += 4.0 * b * shape.seq_len * cfg.q_dim
+        elif k == "l":
+            f += 4.0 * b * min(shape.seq_len, cfg.window) * cfg.q_dim
+        elif k == "r" and cfg.family == "rwkv":
+            f += 4.0 * b * cfg.d_model * cfg.rwkv_head_dim
+    f += 2.0 * b * cfg.d_model * cfg.vocab_size
+    return f
+
+
+def _kv_cache_bytes(cfg: ModelConfig, shape: ShapeSpec, dtype_bytes=2):
+    b = shape.global_batch
+    total = 0
+    for k in cfg.layer_kinds():
+        if k in ("g", "m", "d"):
+            total += 2 * b * shape.seq_len * cfg.kv_dim * dtype_bytes
+        elif k == "l":
+            total += 2 * b * min(shape.seq_len, cfg.window) * cfg.kv_dim \
+                * dtype_bytes
+        elif k == "r":
+            if cfg.family == "rwkv":
+                nh = cfg.d_model // cfg.rwkv_head_dim
+                total += b * nh * cfg.rwkv_head_dim ** 2 * dtype_bytes
+            else:
+                total += b * 4 * cfg.d_model * dtype_bytes
+    return total
+
+
+def analytic_hbm_bytes(cfg: ModelConfig, shape: ShapeSpec,
+                       microbatches: int = 1) -> float:
+    """Global HBM traffic for one step (bf16 weights/activations, f32
+    optimizer; remat-style activation accounting)."""
+    p_total = total_params(cfg)
+    w_bytes = p_total * 2
+    d = cfg.d_model
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        traffic = w_bytes * 2 * microbatches      # fwd + bwd weight reads
+        traffic += p_total * 4 * 2                # grad f32 write+read
+        traffic += p_total * 4 * 4                # m, v read+write
+        traffic += p_total * (2 + 2)              # param read + write
+        traffic += tokens * d * 2 * cfg.n_layers * 2   # carries save+read
+        return traffic
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return w_bytes + tokens * d * 2 * cfg.n_layers * 2 \
+            + _kv_cache_bytes(cfg, shape)
+    # decode
+    return w_bytes + 2 * _kv_cache_bytes(cfg, shape) \
+        + shape.global_batch * d * 2 * cfg.n_layers * 4
+
+
+def analytic_collective_bytes(cfg: ModelConfig, shape: ShapeSpec,
+                              mesh_chips: int = 256, tp: int = 16,
+                              microbatches: int = 1) -> float:
+    """Per-chip ICI bytes for one step (ring-equivalent accounting:
+    all-reduce = 2x payload, RS/AG = 1x each)."""
+    p_total = total_params(cfg)
+    d = cfg.d_model
+    dp = mesh_chips // tp
+    if shape.kind in ("train", "prefill"):
+        tokens_dev = shape.global_batch * shape.seq_len / dp
+        layer_ars = 2 * (2 if shape.kind == "train" else 1)  # attn+mlp
+        tp_bytes = layer_ars * cfg.n_layers * tokens_dev * d * 2 * 2
+        if shape.kind == "train":
+            zero = (p_total * 4 / tp) * 2          # RS grads + AG params
+            return tp_bytes + zero
+        return tp_bytes
+    tokens_dev = shape.global_batch / dp
+    return 4 * cfg.n_layers * tokens_dev * d * 2 * 2
+
+
+@dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        vals = {"compute": self.compute_s, "memory": self.memory_s,
+                "collective": self.collective_s}
+        return max(vals, key=vals.get)
+
+    @property
+    def step_s(self) -> float:
+        """Lower-bound step time: terms overlap perfectly."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the step spent on the compute roof if perfectly
+        overlapped = achievable MFU upper bound for this mapping."""
+        return self.compute_s / self.step_s if self.step_s else 0.0
+
+
+def roofline_terms(cfg: ModelConfig, shape: ShapeSpec, chips: int = 256,
+                   tp: int = 16, microbatches: int = 1) -> RooflineTerms:
+    f = analytic_flops(cfg, shape) / chips
+    m = analytic_hbm_bytes(cfg, shape, microbatches) / chips
+    c = analytic_collective_bytes(cfg, shape, chips, tp, microbatches)
+    return RooflineTerms(f / PEAK_FLOPS, m / HBM_BW, c / ICI_BW)

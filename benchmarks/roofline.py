@@ -1,0 +1,96 @@
+"""Roofline extraction: analytic three-term model per dry-run cell,
+cross-checked against the compiled artifact's cost/memory analysis.
+
+Reads ``dryrun_results.json`` (produced by ``repro.launch.dryrun``) and
+emits one row per (arch x shape) on the single-pod mesh with:
+
+  compute_s / memory_s / collective_s   (seconds, per step)
+  dominant term, achievable-MFU bound, MODEL_FLOPS/HLO ratio note,
+  per-device memory fit vs the 16 GB HBM budget.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs import ARCHS, SHAPES
+
+from .analytic import (HBM_BW, ICI_BW, PEAK_FLOPS, analytic_flops,
+                       roofline_terms)
+
+Row = Tuple[str, float, str]
+
+MICROBATCHES = {"train_4k": 8}
+
+
+def load_dryrun(path: str = "dryrun_results.json") -> Dict:
+    if not os.path.exists(path):
+        return {}
+    out = {}
+    for rec in json.load(open(path)):
+        if rec.get("status") == "ok":
+            out[(rec["arch"], rec["shape"], rec["mesh"])] = rec
+    return out
+
+
+def roofline_rows(dryrun_path: str = "dryrun_results.json") -> List[Row]:
+    rows: List[Row] = []
+    dr = load_dryrun(dryrun_path)
+    chips = 256
+    for arch, cfg in ARCHS.items():
+        for shape in SHAPES:
+            from repro.configs.shapes import shape_applicable
+            ok, _ = shape_applicable(cfg, shape)
+            if not ok:
+                continue
+            mb = MICROBATCHES.get(shape.name, 1)
+            terms = roofline_terms(cfg, shape, chips=chips, tp=16,
+                                   microbatches=mb)
+            rec = dr.get((arch, shape.name, "16x16"))
+            extra = ""
+            if rec:
+                hlo_flops_dev = rec["flops"]
+                model_dev = analytic_flops(cfg, shape) / chips
+                peak = rec["per_device"]["peak_bytes"] / 2 ** 30
+                coll = sum(rec["collective_bytes"].values())
+                extra = (f";hlo_flops_dev={hlo_flops_dev:.3e}"
+                         f";hlo_coll_bytes={coll:.3e}"
+                         f";peak_gib={peak:.1f}"
+                         f";fits_16g={peak < 16.0}")
+            rows.append((
+                f"roofline/{arch}/{shape.name}", 0.0,
+                f"compute_s={terms.compute_s:.4e}"
+                f";memory_s={terms.memory_s:.4e}"
+                f";collective_s={terms.collective_s:.4e}"
+                f";dominant={terms.dominant}"
+                f";mfu_bound={terms.roofline_fraction:.2f}" + extra))
+    return rows
+
+
+def summary_table(dryrun_path: str = "dryrun_results.json") -> str:
+    """Markdown table for EXPERIMENTS.md §Roofline."""
+    dr = load_dryrun(dryrun_path)
+    chips = 256
+    lines = [
+        "| arch | shape | compute_s | memory_s | collective_s | dominant "
+        "| MFU bound | peak GiB/chip | fits 16G |",
+        "|---|---|---|---|---|---|---|---|---|"]
+    for arch, cfg in ARCHS.items():
+        for shape in SHAPES:
+            from repro.configs.shapes import shape_applicable
+            ok, _ = shape_applicable(cfg, shape)
+            if not ok:
+                continue
+            mb = MICROBATCHES.get(shape.name, 1)
+            t = roofline_terms(cfg, shape, chips=chips, tp=16,
+                               microbatches=mb)
+            rec = dr.get((arch, shape.name, "16x16"))
+            peak = (rec["per_device"]["peak_bytes"] / 2 ** 30
+                    if rec else float("nan"))
+            lines.append(
+                f"| {arch} | {shape.name} | {t.compute_s:.3e} "
+                f"| {t.memory_s:.3e} | {t.collective_s:.3e} "
+                f"| {t.dominant} | {t.roofline_fraction:.2f} "
+                f"| {peak:.1f} | {'yes' if peak < 16 else 'NO'} |")
+    return "\n".join(lines)

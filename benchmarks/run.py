@@ -1,0 +1,47 @@
+"""Benchmark harness: one section per paper table + roofline extraction.
+
+Prints ``name,us_per_call,derived`` CSV (the harness contract).
+
+  PYTHONPATH=src python -m benchmarks.run [--section table1|table2|table3|
+                                           fa|sim|roofline|all]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--section", default="all")
+    ap.add_argument("--dryrun-json", default="dryrun_results.json")
+    args = ap.parse_args()
+
+    from . import tables
+    from .roofline import roofline_rows
+
+    sections = {
+        "table1": tables.table1_latency,
+        "table2": tables.table2_area,
+        "table3": tables.table3_matvec,
+        "fa": tables.fa_comparison,
+        "sim": tables.sim_throughput,
+        "pim_plan": tables.pim_plan_sweep,
+        "energy": tables.energy_table,
+        "roofline": lambda: roofline_rows(args.dryrun_json),
+    }
+    names = list(sections) if args.section == "all" else [args.section]
+    print("name,us_per_call,derived")
+    bad = 0
+    for name in names:
+        try:
+            for row in sections[name]():
+                print(f"{row[0]},{row[1]:.1f},{row[2]}")
+        except Exception as e:    # noqa: BLE001
+            bad += 1
+            print(f"{name},0.0,ERROR={e!r}", file=sys.stderr)
+    sys.exit(1 if bad else 0)
+
+
+if __name__ == "__main__":
+    main()

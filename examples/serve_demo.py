@@ -1,0 +1,10 @@
+"""Batched serving demo: prefill + KV-cache greedy decode (gemma2 smoke).
+
+    PYTHONPATH=src python examples/serve_demo.py
+"""
+import subprocess
+import sys
+
+sys.exit(subprocess.call(
+    [sys.executable, "-m", "repro.launch.serve", "--arch", "gemma2-9b",
+     "--smoke", "--batch", "4", "--prompt-len", "32", "--gen", "32"]))

@@ -1,0 +1,28 @@
+"""End-to-end driver: train a ~100M-param qwen3-family model.
+
+    PYTHONPATH=src python examples/train_100m.py [--steps 300]
+
+Uses the full production path (sharded train_step, remat, ZeRO-1
+specs, deterministic pipeline, checkpointing) on the host mesh.
+"""
+import argparse
+import subprocess
+import sys
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--seq-len", type=int, default=128)
+ap.add_argument("--global-batch", type=int, default=4)
+args = ap.parse_args()
+
+override = ('{"n_layers": 10, "d_model": 768, "n_heads": 12, '
+            '"n_kv_heads": 4, "head_dim": 64, "d_ff": 3072, '
+            '"vocab_size": 32000, "window": 128}')
+cmd = [sys.executable, "-m", "repro.launch.train",
+       "--arch", "qwen3-8b", "--override", override,
+       "--steps", str(args.steps), "--seq-len", str(args.seq_len),
+       "--global-batch", str(args.global_batch),
+       "--lr", "6e-4", "--warmup", "30",
+       "--log-file", "train_100m_loss.csv"]
+print(" ".join(cmd))
+sys.exit(subprocess.call(cmd))

@@ -1,0 +1,31 @@
+"""MultPIM core: stateful-logic ISA, cycle-accurate simulator, algorithms.
+
+Public surface:
+
+* :mod:`repro.core.isa` / :mod:`repro.core.program` /
+  :mod:`repro.core.executor` — the partitioned-crossbar machine model;
+* :mod:`repro.core.multpim` — the paper's multiplier (Table I/II exact);
+* :mod:`repro.core.matvec` — the Section-VI fused-MAC / mat-vec;
+* :mod:`repro.core.adders` — the novel 5/4-cycle FA, 5N ripple adder;
+* :mod:`repro.core.baselines` — Haj-Ali and RIME;
+* :mod:`repro.core.costmodel` — closed-form tables + crossbar tiling.
+"""
+from .isa import Gate, Op
+from .program import Layout, Program, ProgramBuilder
+from .executor import run_numpy, run_jax, pack_program, PackedProgram
+from .multpim import (multpim_multiplier, multpim_latency_formula,
+                      multpim_area_formula)
+from .matvec import multpim_mac, matvec, inner_product
+from .adders import full_adder_program, felix_full_adder_program, ripple_adder
+from .baselines import hajali_multiplier, rime_multiplier
+from .costmodel import gemm_cost, CrossbarSpec, ALGOS
+
+__all__ = [
+    "Gate", "Op", "Layout", "Program", "ProgramBuilder",
+    "run_numpy", "run_jax", "pack_program", "PackedProgram",
+    "multpim_multiplier", "multpim_latency_formula", "multpim_area_formula",
+    "multpim_mac", "matvec", "inner_product",
+    "full_adder_program", "felix_full_adder_program", "ripple_adder",
+    "hajali_multiplier", "rime_multiplier",
+    "gemm_cost", "CrossbarSpec", "ALGOS",
+]

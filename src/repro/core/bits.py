@@ -1,0 +1,45 @@
+"""Bit-packing helpers: integers <-> little-endian bit planes.
+
+The PIM simulator state is a ``(rows, cols)`` tensor of {0,1}. Fixed-point
+numbers live in consecutive columns, little-endian (column ``base + j``
+holds bit ``j``). These helpers convert between numpy/JAX integer arrays
+and bit planes, for arbitrary widths up to 64 bits (python-int fallback
+keeps exactness beyond signed-int64 range for products like 64x64 bits).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["to_bits", "from_bits", "mask"]
+
+
+def mask(n_bits: int) -> int:
+    return (1 << n_bits) - 1
+
+
+def to_bits(x, n_bits: int) -> np.ndarray:
+    """``(...,)`` ints -> ``(..., n_bits)`` uint8 bit planes (little-endian)."""
+    arr = np.asarray(x, dtype=object)
+    out = np.zeros(arr.shape + (n_bits,), dtype=np.uint8)
+    flat = arr.reshape(-1)
+    oflat = out.reshape(-1, n_bits)
+    for i, v in enumerate(flat):
+        v = int(v) & mask(n_bits)
+        for j in range(n_bits):
+            oflat[i, j] = (v >> j) & 1
+    return out
+
+
+def from_bits(bits: np.ndarray) -> np.ndarray:
+    """``(..., n_bits)`` {0,1} -> object-int array (exact for any width)."""
+    bits = np.asarray(bits)
+    n_bits = bits.shape[-1]
+    flat = bits.reshape(-1, n_bits)
+    out = np.empty((flat.shape[0],), dtype=object)
+    for i in range(flat.shape[0]):
+        v = 0
+        for j in range(n_bits):
+            if flat[i, j]:
+                v |= 1 << j
+        out[i] = v
+    return out.reshape(bits.shape[:-1])

@@ -1,0 +1,1 @@
+from .pipeline import DataConfig, SyntheticStream, make_batch_fn

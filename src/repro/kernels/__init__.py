@@ -1,0 +1,6 @@
+"""Pallas TPU kernels (interpret=True validated on CPU; see ops.py)."""
+from .ops import (bitserial_matmul, bitserial_matmul_ref, crossbar_run,
+                  crossbar_run_ref)
+
+__all__ = ["crossbar_run", "crossbar_run_ref",
+           "bitserial_matmul", "bitserial_matmul_ref"]

@@ -1,0 +1,36 @@
+"""Public jit'd entry points for the kernels (Pallas with jnp fallback).
+
+``interpret=True`` everywhere on CPU (this container); on a real TPU the
+same calls lower to Mosaic with the documented BlockSpecs.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.executor import PackedProgram
+
+from .bitserial_matmul import bitserial_matmul_pallas
+from .crossbar_step import crossbar_run_pallas
+from .ref import bitserial_matmul_ref, crossbar_run_ref
+
+__all__ = ["crossbar_run", "bitserial_matmul",
+           "crossbar_run_ref", "bitserial_matmul_ref"]
+
+
+def crossbar_run(state_bits: jnp.ndarray, packed: PackedProgram, *,
+                 use_pallas: bool = True, interpret: bool = True,
+                 row_block: int = 256) -> jnp.ndarray:
+    if use_pallas:
+        return crossbar_run_pallas(state_bits, packed,
+                                   row_block=row_block, interpret=interpret)
+    return crossbar_run_ref(state_bits, packed)
+
+
+def bitserial_matmul(x: jnp.ndarray, w: jnp.ndarray, n_bits: int = 8, *,
+                     use_pallas: bool = True, interpret: bool = True,
+                     bm: int = 128, bn: int = 128, bk: int = 128
+                     ) -> jnp.ndarray:
+    if use_pallas:
+        return bitserial_matmul_pallas(x, w, n_bits, bm=bm, bn=bn, bk=bk,
+                                       interpret=interpret)
+    return bitserial_matmul_ref(x, w, n_bits)

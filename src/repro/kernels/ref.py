@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.executor import PackedProgram
+from repro.core.isa import Gate
+
+__all__ = ["crossbar_run_ref", "bitserial_matmul_ref"]
+
+
+def crossbar_run_ref(state_bits: jnp.ndarray, packed: PackedProgram
+                     ) -> jnp.ndarray:
+    """lax.scan executor over the packed tables (uint8 semantics)."""
+    tables = (jnp.asarray(packed.gate_id), jnp.asarray(packed.in_cols),
+              jnp.asarray(packed.out_col), jnp.asarray(packed.init_mask))
+
+    def step(st, tabs):
+        gid, ics, ocs, imask = tabs
+        st = jnp.where(imask, jnp.uint8(1), st)
+        x0 = st[:, ics[:, 0]].astype(jnp.int32)
+        x1 = st[:, ics[:, 1]].astype(jnp.int32)
+        x2 = st[:, ics[:, 2]].astype(jnp.int32)
+        s3 = x0 + x1 + x2
+        res = jnp.select(
+            [gid == int(Gate.NOT), gid == int(Gate.NOR),
+             gid == int(Gate.MIN3), gid == int(Gate.NAND),
+             gid == int(Gate.OR), gid == int(Gate.COPY)],
+            [1 - x0, ((x0 + x1) == 0).astype(jnp.int32),
+             (s3 <= 1).astype(jnp.int32), 1 - x0 * x1,
+             ((x0 + x1) >= 1).astype(jnp.int32), x0],
+            default=jnp.int32(1),
+        ).astype(jnp.uint8)
+        st = st.at[:, ocs].min(res)
+        return st, None
+
+    pad = packed.init_mask.shape[1] - state_bits.shape[1]
+    st = jnp.pad(state_bits.astype(jnp.uint8), ((0, 0), (0, pad)))
+    st, _ = jax.lax.scan(step, st, tables)
+    return st[:, :state_bits.shape[1]]
+
+
+def bitserial_matmul_ref(x: jnp.ndarray, w: jnp.ndarray,
+                         n_bits: int = 8) -> jnp.ndarray:
+    """Bit-plane decomposition reference: sum_j 2^j (X_j @ W)."""
+    x = jnp.asarray(x, jnp.int32)
+    acc = jnp.zeros((x.shape[0], w.shape[1]), jnp.float32)
+    for j in range(n_bits):
+        plane = ((x >> j) & 1).astype(jnp.float32)
+        acc += (2.0 ** j) * plane @ w.astype(jnp.float32)
+    return acc

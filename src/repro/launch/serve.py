@@ -1,0 +1,77 @@
+"""Production serving driver: batched prefill + greedy decode loop.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma2-9b --smoke \
+      --batch 4 --prompt-len 32 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import logging
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.mesh import make_host_mesh
+from repro.models import build_model
+from repro.models.transformer import encode
+from repro.train import make_serve_step
+
+logging.basicConfig(level=logging.INFO, format="%(message)s")
+log = logging.getLogger("repro.serve")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = build_model(cfg)
+    mesh = make_host_mesh(args.model_parallel)
+    params = model.init(jax.random.PRNGKey(0))
+
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(3, cfg.vocab_size,
+                                       (args.batch, args.prompt_len)))
+
+    # prefill: run the full forward leaving KV/recurrent state behind
+    states = model.init_decode_state(args.batch, args.cache_len)
+    if cfg.family == "encdec":
+        frames = jnp.asarray(rng.standard_normal(
+            (args.batch, cfg.enc_frames, cfg.d_model)), jnp.float32)
+        states["enc_out"] = encode(cfg, params, frames)
+    t0 = time.time()
+    logits, states = model.forward(params, prompts, states=states)
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    log.info("prefill %d x %d: %.2fs", args.batch, args.prompt_len,
+             time.time() - t0)
+
+    serve, jit_for = make_serve_step(model, mesh)
+    batch_like = {"token": tok, "position": jnp.zeros((args.batch, 1),
+                                                      jnp.int32)}
+    jit_serve = jit_for(params, states, batch_like)
+
+    out = [np.asarray(tok)]
+    t0 = time.time()
+    for t in range(args.gen - 1):
+        pos = jnp.full((args.batch, 1), args.prompt_len + t, jnp.int32)
+        tok, states = jit_serve(params, states, tok, pos)
+        out.append(np.asarray(tok))
+    dt = time.time() - t0
+    gen = np.concatenate(out, axis=1)
+    log.info("generated %d x %d tokens in %.2fs (%.1f tok/s/seq)",
+             args.batch, args.gen, dt, (args.gen - 1) / max(dt, 1e-9))
+    log.info("sample: %s", gen[0][:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

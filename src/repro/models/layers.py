@@ -1,0 +1,76 @@
+"""Shared neural primitives (pure functions over explicit param pytrees)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rms_norm", "layer_norm", "softcap", "rope", "swiglu", "gelu_mlp",
+           "dense_init", "Initializer"]
+
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(x.dtype) * (1.0 + w)
+
+
+def layer_norm(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+               eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w + b
+
+
+def softcap(x: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray,
+         theta: float = 10000.0) -> jnp.ndarray:
+    """Rotary embedding. x: (..., S, H, D) with D even; positions (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    # positions (..., S) -> (..., S, 1, 1) broadcast over heads and dims
+    ang = positions[..., :, None, None].astype(jnp.float32) * freq
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x, w1, w3, w2):
+    return (jax.nn.silu(x @ w1) * (x @ w3)) @ w2
+
+
+def gelu_mlp(x, w1, w2):
+    return jax.nn.gelu(x @ w1) @ w2
+
+
+class Initializer:
+    """Deterministic, cheap param init (split-by-path fold-in)."""
+
+    def __init__(self, key: jax.Array, scale: float = 0.02):
+        self.key = key
+        self.scale = scale
+        self._n = 0
+
+    def __call__(self, *shape, scale: Optional[float] = None,
+                 dtype=jnp.float32) -> jnp.ndarray:
+        self._n += 1
+        k = jax.random.fold_in(self.key, self._n)
+        s = self.scale if scale is None else scale
+        return (jax.random.normal(k, shape, jnp.float32) * s).astype(dtype)
+
+    def zeros(self, *shape, dtype=jnp.float32) -> jnp.ndarray:
+        self._n += 1
+        return jnp.zeros(shape, dtype)
+
+
+def dense_init(key, in_dim, out_dim, dtype=jnp.float32):
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32)
+            * (in_dim ** -0.5)).astype(dtype)

@@ -1,0 +1,100 @@
+"""Public model API: build_model(config) -> Model (init/loss/serve fns)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from . import transformer as T
+
+__all__ = ["Model", "build_model", "input_specs"]
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable[..., Any]
+    loss: Callable[..., jnp.ndarray]
+    forward: Callable[..., Any]
+    decode_step: Callable[..., Any]
+    init_decode_state: Callable[..., Any]
+
+
+def build_model(cfg: ModelConfig, remat: bool = False) -> Model:
+    def init(key, dtype=jnp.float32):
+        return T.init_params(cfg, key, dtype)
+
+    def loss(params, batch) -> jnp.ndarray:
+        tokens = batch["tokens"]
+        labels = batch["labels"]
+        kwargs = {}
+        if cfg.family == "vlm":
+            kwargs["extra_embed"] = batch["patches"]
+        if cfg.family == "encdec":
+            kwargs["enc_frames"] = batch["frames"]
+        logits, _ = T.forward(cfg, params, tokens, remat=remat,
+                              **kwargs)
+        if cfg.family == "vlm":   # patches prepended: score text tail only
+            logits = logits[:, -tokens.shape[1]:]
+        # Sharding-stable cross entropy: the vocab axis of `logits` is
+        # model-sharded; take_along_axis would force an all-gather of the
+        # full-vocab f32 logits (O(tokens x V) replicated). Reductions +
+        # a one-hot contraction keep every intermediate sharded and only
+        # (B, S) vectors leave in f32.
+        v = logits.shape[-1]
+        m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+        shifted = (logits - m).astype(jnp.float32)
+        lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+        onehot = jax.nn.one_hot(labels, v, dtype=logits.dtype)
+        label_logit = jnp.sum(logits * onehot, axis=-1).astype(jnp.float32)
+        nll = lse.astype(jnp.float32) - label_logit
+        mask = (labels >= 0).astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+    def fwd(params, tokens, **kw):
+        return T.forward(cfg, params, tokens, **kw)
+
+    def decode(params, token, position, states):
+        return T.decode_step(cfg, params, token, position, states)
+
+    def init_state(batch, cache_len, dtype=jnp.float32):
+        return T.init_decode_state(cfg, batch, cache_len, dtype)
+
+    return Model(cfg, init, loss, fwd, decode, init_state)
+
+
+def input_specs(cfg: ModelConfig, shape, dtype=jnp.bfloat16
+                ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of a given
+    assigned shape (no allocation; weak-type-correct; shardable)."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        spec = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+        if cfg.family == "vlm":
+            spec["patches"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_patches, cfg.d_model), dtype)
+        if cfg.family == "encdec":
+            spec["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.enc_frames, cfg.d_model), dtype)
+        return spec
+    if shape.kind == "prefill":
+        spec = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if cfg.family == "vlm":
+            spec["patches"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_patches, cfg.d_model), dtype)
+        if cfg.family == "encdec":
+            spec["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.enc_frames, cfg.d_model), dtype)
+        return spec
+    # decode: one new token against a seq_len cache
+    return {
+        "token": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        "position": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+    }

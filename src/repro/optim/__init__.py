@@ -1,0 +1,2 @@
+from .adamw import AdamWConfig, OptState, adamw_init, adamw_update, cosine_schedule
+from .compress import ef_compress_tree, compressed_psum, quantize_grad

@@ -1,0 +1,103 @@
+"""AdamW from scratch (no optax in this environment) + LR schedules.
+
+Optimizer state shards exactly like the parameters (the param_shardings
+rules apply leaf-wise to m/v), which with TP already distributes the
+state 16-way; a ZeRO-1 flag additionally shards replicated leaves over
+the data axis (see train/step.py).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "OptState", "adamw_init", "adamw_update",
+           "cosine_schedule", "global_norm", "clip_by_global_norm"]
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+
+
+class OptState(NamedTuple):
+    m: Any
+    v: Any
+    count: jnp.ndarray
+
+
+def cosine_schedule(cfg: AdamWConfig) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / max(1, cfg.warmup_steps), 1.0)
+        frac = jnp.clip((step - cfg.warmup_steps)
+                        / max(1, cfg.total_steps - cfg.warmup_steps), 0, 1)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        scale = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+        return cfg.lr * warm * scale
+    return lr
+
+
+def global_norm(tree) -> jnp.ndarray:
+    sq = jax.tree.map(lambda x: jnp.sum(jnp.square(x.astype(jnp.float32))),
+                      tree)
+    return jnp.sqrt(sum(jax.tree.leaves(sq)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda x: x * scale, tree), norm
+
+
+def adamw_init(params) -> OptState:
+    zeros = jax.tree.map(lambda x: jnp.zeros_like(x, dtype=jnp.float32),
+                         params)
+    return OptState(m=zeros,
+                    v=jax.tree.map(jnp.zeros_like, zeros),
+                    count=jnp.zeros((), jnp.int32))
+
+
+def adamw_update(cfg: AdamWConfig, grads, state: OptState, params
+                 ) -> Tuple[Any, OptState, dict]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    count = state.count + 1
+    lr = cosine_schedule(cfg)(count)
+    b1, b2 = cfg.b1, cfg.b2
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * jnp.square(g)
+        mh = m2 / (1 - b1 ** count.astype(jnp.float32))
+        vh = v2 / (1 - b2 ** count.astype(jnp.float32))
+        step = mh / (jnp.sqrt(vh) + cfg.eps)
+        if p.ndim >= 2:   # decoupled decay on matrices only
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m2, v2
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    new_p, new_m, new_v = [], [], []
+    for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p):
+        p2, m2, v2 = upd(g, m, v, p)
+        new_p.append(p2)
+        new_m.append(m2)
+        new_v.append(v2)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return (treedef.unflatten(new_p),
+            OptState(treedef.unflatten(new_m), treedef.unflatten(new_v),
+                     count), metrics)

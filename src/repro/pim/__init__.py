@@ -1,0 +1,8 @@
+"""PIM systems integration: quantization, PIMLinear, crossbar planner."""
+from .quant import QTensor, quantize, dequantize, qmatmul_exact
+from .pim_linear import PIMLinearSpec, pim_linear_apply
+from .planner import GemmShape, PIMPlan, plan_model, gemms_from_config
+
+__all__ = ["QTensor", "quantize", "dequantize", "qmatmul_exact",
+           "PIMLinearSpec", "pim_linear_apply",
+           "GemmShape", "PIMPlan", "plan_model", "gemms_from_config"]

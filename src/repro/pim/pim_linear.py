@@ -1,0 +1,77 @@
+"""PIMLinear: a linear layer executed with MultPIM fixed-point semantics.
+
+Three numerically-linked execution paths:
+
+1. ``mode="float"`` — plain f32/bf16 matmul (training / baseline).
+2. ``mode="pim"`` — quantize activations+weights to N bits, integer
+   matmul via the CSAS bit-serial Pallas kernel (bit-identical to what
+   the in-memory MultPIM-MAC computes; tests close the loop against the
+   cycle-accurate simulator on small tiles), dequantize.
+3. ``mode="fake"`` — quantize-dequantize with a float matmul
+   (straight-through estimator for PIM-aware finetuning).
+
+Every PIMLinear also knows its Section-VI crossbar cost
+(:func:`repro.core.costmodel.gemm_cost`), which the planner aggregates
+into per-model PIM latency/area reports.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core.costmodel import CrossbarSpec, GemmCost, gemm_cost
+
+from .quant import QTensor, dequantize, qmatmul_exact, quantize
+
+__all__ = ["PIMLinearSpec", "pim_linear_apply"]
+
+
+@dataclass(frozen=True)
+class PIMLinearSpec:
+    in_dim: int
+    out_dim: int
+    n_bits: int = 8
+    mode: str = "float"           # float | pim | fake
+    use_pallas: bool = False      # route the int matmul through Pallas
+
+    def cost(self, batch_rows: int,
+             spec: CrossbarSpec = CrossbarSpec()) -> GemmCost:
+        return gemm_cost(batch_rows, self.in_dim, self.out_dim,
+                         self.n_bits, spec=spec)
+
+
+def pim_linear_apply(spec: PIMLinearSpec, x: jnp.ndarray, w: jnp.ndarray,
+                     b: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """x (..., in_dim) @ w (in_dim, out_dim) under the chosen mode."""
+    if spec.mode == "float":
+        y = x @ w
+    elif spec.mode == "fake":
+        xq = quantize(x, spec.n_bits)
+        wq = quantize(w, spec.n_bits, axis=0)
+        y = dequantize(xq) @ dequantize(wq)
+    elif spec.mode == "pim":
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, spec.in_dim)
+        xq = quantize(x2, spec.n_bits)
+        wq = quantize(w, spec.n_bits, axis=0)
+        if spec.use_pallas:
+            from repro.kernels.ops import bitserial_matmul
+            prod = bitserial_matmul(xq.q, wq.q.astype(jnp.float32),
+                                    spec.n_bits)
+            k = x2.shape[-1]
+            corr = (xq.zero * jnp.sum(wq.q.astype(jnp.float32), axis=0,
+                                      keepdims=True)
+                    + wq.zero * jnp.sum(xq.q.astype(jnp.float32), axis=-1,
+                                        keepdims=True)
+                    - k * xq.zero * wq.zero)
+            y = (prod - corr) * xq.scale * wq.scale
+        else:
+            y = qmatmul_exact(xq, wq)
+        y = y.reshape(*lead, spec.out_dim)
+    else:
+        raise ValueError(spec.mode)
+    if b is not None:
+        y = y + b
+    return y

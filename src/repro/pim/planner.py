@@ -1,0 +1,121 @@
+"""PIM offload planner: map a model's matmuls onto crossbar tiles.
+
+Walks a model config's GEMM inventory (attention projections, FFN/expert
+matmuls, embeddings/LM head) and produces the Section-VI crossbar cost of
+serving it on a memristive PIM accelerator: total crossbars, memristors,
+per-token latency (cycles and microseconds), energy proxy, and the
+speedup over a FloatPIM-style mapping — i.e., the paper's Table III
+scaled up from an 8-element mat-vec to full LM workloads.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+from repro.core.costmodel import CrossbarSpec, gemm_cost
+
+__all__ = ["GemmShape", "PIMPlan", "plan_model"]
+
+
+@dataclass(frozen=True)
+class GemmShape:
+    name: str
+    m: int          # rows per invocation (tokens)
+    k: int
+    n: int
+    count: int = 1  # invocations per model step (e.g. layers)
+
+
+@dataclass
+class PIMPlan:
+    gemms: List[GemmShape]
+    n_bits: int
+    spec: CrossbarSpec
+    per_gemm: List[Dict] = field(default_factory=list)
+    total_cycles: int = 0
+    total_cycles_floatpim: int = 0
+    total_memristors: int = 0
+    total_crossbars: int = 0
+
+    @property
+    def speedup_vs_floatpim(self) -> float:
+        return self.total_cycles_floatpim / max(1, self.total_cycles)
+
+    @property
+    def latency_us(self) -> float:
+        return self.total_cycles * self.spec.cycle_ns / 1e3
+
+    def summary(self) -> str:
+        lines = [f"PIM plan ({self.n_bits}-bit, crossbar "
+                 f"{self.spec.rows}x{self.spec.cols}):"]
+        for g, c in zip(self.gemms, self.per_gemm):
+            lines.append(
+                f"  {g.name:<24} {g.m}x{g.k}x{g.n} x{g.count}: "
+                f"{c['cycles']:>12,} cyc  {c['crossbars']:>6} xbars")
+        lines.append(
+            f"  TOTAL {self.total_cycles:,} cycles ({self.latency_us:,.1f} us"
+            f" @ {self.spec.cycle_ns} ns), {self.total_crossbars} crossbars,"
+            f" {self.total_memristors/1e9:.2f} G-memristors")
+        lines.append(
+            f"  vs FloatPIM mapping: {self.speedup_vs_floatpim:.1f}x faster")
+        return "\n".join(lines)
+
+
+def plan_model(gemms: List[GemmShape], n_bits: int = 8,
+               spec: CrossbarSpec = CrossbarSpec()) -> PIMPlan:
+    plan = PIMPlan(gemms=gemms, n_bits=n_bits, spec=spec)
+    for g in gemms:
+        # weight-stationary mapping (Fig. 5 with the weight matrix as A):
+        # output features -> crossbar rows, activations stream as the
+        # duplicated vector, one mat-vec pass per token.
+        c = gemm_cost(g.n, g.k, g.m, n_bits, spec=spec)
+        f = gemm_cost(g.n, g.k, g.m, n_bits, spec=spec, algo="floatpim")
+        d = c.as_dict()
+        d["cycles"] = c.cycles * g.count
+        d["crossbars"] = c.crossbars
+        plan.per_gemm.append(d)
+        plan.total_cycles += c.cycles * g.count
+        plan.total_cycles_floatpim += f.cycles * g.count
+        plan.total_memristors += c.memristors * g.count
+        plan.total_crossbars += c.crossbars * g.count
+    return plan
+
+
+def gemms_from_config(cfg, batch_tokens: int = 1) -> List[GemmShape]:
+    """Extract the per-step GEMM inventory from a model config
+    (:mod:`repro.configs`). Serving-shaped: m = batch_tokens."""
+    m = batch_tokens
+    d = cfg.d_model
+    nm = 3 if cfg.mlp_type == "swiglu" else 2
+    g: List[GemmShape] = []
+    kinds = cfg.layer_kinds()
+    n_attn = sum(1 for k in kinds if k in ("g", "l", "m", "d"))
+    n_rec = sum(1 for k in kinds if k == "r")
+    n_moe = sum(1 for k in kinds if k == "m")
+    n_densef = sum(1 for k in kinds if k in ("g", "l"))
+    n_dmoe = sum(1 for k in kinds if k == "d")
+
+    if n_attn:
+        g.append(GemmShape("attn.q", m, d, cfg.q_dim, n_attn))
+        g.append(GemmShape("attn.kv", m, d, 2 * cfg.kv_dim, n_attn))
+        g.append(GemmShape("attn.o", m, cfg.q_dim, d, n_attn))
+    if n_rec:
+        if cfg.family == "rwkv":
+            g.append(GemmShape("rwkv.time_mix", m, d, 5 * d, n_rec))
+            g.append(GemmShape("rwkv.channel_mix", m, d,
+                               cfg.d_ff + 2 * d, n_rec))
+        else:
+            g.append(GemmShape("rglru.proj", m, d, 4 * d + d, n_rec))
+            g.append(GemmShape("rglru.ffn", m, d, nm * cfg.d_ff, n_rec))
+    if n_densef:
+        g.append(GemmShape("ffn", m, d, nm * cfg.d_ff, n_densef))
+    if n_moe:
+        e = cfg.moe
+        active = e.top_k + e.n_shared
+        g.append(GemmShape("moe.ffn", m, d, nm * cfg.d_ff, n_moe * active))
+        g.append(GemmShape("moe.router", m, d, e.n_experts, n_moe))
+    if n_dmoe:
+        g.append(GemmShape("moe.dense_ffn", m, d,
+                           nm * (cfg.moe.d_ff_dense or cfg.d_ff), n_dmoe))
+    g.append(GemmShape("lm_head", m, d, cfg.vocab_size, 1))
+    return g

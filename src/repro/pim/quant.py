@@ -1,0 +1,52 @@
+"""N-bit fixed-point quantization matching the PIM simulator's numerics.
+
+MultPIM operates on unsigned N-bit fixed point. We use symmetric
+per-channel affine quantization with an unsigned-offset trick so the
+in-memory multiplier sees non-negative operands (the standard deployment
+choice for PIM crossbars): ``q = clip(round(x/s) + 2^(n-1), 0, 2^n - 1)``
+and matmuls correct the offset analytically.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax.numpy as jnp
+
+__all__ = ["QTensor", "quantize", "dequantize", "qmatmul_exact"]
+
+
+class QTensor(NamedTuple):
+    q: jnp.ndarray        # int32, in [0, 2^n)
+    scale: jnp.ndarray    # per-channel or scalar, f32
+    n_bits: int
+    zero: int             # unsigned offset 2^(n-1)
+
+
+def quantize(x: jnp.ndarray, n_bits: int = 8, axis=None) -> QTensor:
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    scale = jnp.maximum(amax, 1e-8) / (2 ** (n_bits - 1) - 1)
+    zero = 2 ** (n_bits - 1)
+    q = jnp.clip(jnp.round(x / scale) + zero, 0, 2 ** n_bits - 1)
+    return QTensor(q.astype(jnp.int32), scale.astype(jnp.float32),
+                   n_bits, zero)
+
+
+def dequantize(t: QTensor) -> jnp.ndarray:
+    return (t.q.astype(jnp.float32) - t.zero) * t.scale
+
+
+def qmatmul_exact(xq: QTensor, wq: QTensor) -> jnp.ndarray:
+    """Integer matmul with offset correction; bit-identical to what the
+    in-memory MultPIM-MAC mat-vec computes on the quantized operands.
+
+    (x - zx) sx @ (w - zw) sw = sx sw [xq@wq - zx*sum(wq) - zw*sum(xq)
+                                       + K*zx*zw]
+    """
+    xi = xq.q.astype(jnp.float32)
+    wi = wq.q.astype(jnp.float32)
+    k = xi.shape[-1]
+    prod = xi @ wi                      # exact: values < 2^24
+    corr = (xq.zero * jnp.sum(wi, axis=0, keepdims=True)
+            + wq.zero * jnp.sum(xi, axis=-1, keepdims=True)
+            - k * xq.zero * wq.zero)
+    return (prod - corr) * xq.scale * wq.scale

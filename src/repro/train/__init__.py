@@ -1,0 +1,4 @@
+from .step import make_train_step, make_serve_step, make_prefill
+from .sharding import param_shardings, batch_shardings, state_shardings
+from .checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from .fault import RetryingRunner, StragglerWatch, elastic_remesh

@@ -1,0 +1,103 @@
+"""Full adders (Section IV-B1) + N-bit ripple adders (footnote 6)."""
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.adders import (FA_CYCLES_FELIX, FA_CYCLES_MULTPIM,
+                               FA_CYCLES_MULTPIM_PRENEG,
+                               felix_full_adder_program, full_adder_program,
+                               ripple_adder)
+from repro.core.bits import from_bits, to_bits
+from repro.core.executor import run_numpy
+
+pytestmark = pytest.mark.core
+
+_COMBOS = np.array(list(itertools.product([0, 1], repeat=3)), np.uint8)
+
+
+def _check_fa(prog, preneg=False):
+    inp = {"a": _COMBOS[:, :1], "b": _COMBOS[:, 1:2], "cin": _COMBOS[:, 2:3]}
+    if preneg:
+        inp["cin_n"] = 1 - _COMBOS[:, 2:3]
+    out = run_numpy(prog, inp)
+    tot = _COMBOS.sum(1)
+    assert (out["s"][:, 0] == (tot & 1)).all()
+    assert (out["cout"][:, 0] == (tot >= 2)).all()
+
+
+def test_multpim_fa_5_cycles():
+    prog = full_adder_program(preneg=False)
+    assert sum(1 for c in prog.cycles if not c.is_init) == FA_CYCLES_MULTPIM
+    hist = prog.gate_histogram()
+    assert set(hist) <= {"NOT", "MIN3", "INIT"}   # NOT/Min3 only
+    _check_fa(prog)
+
+
+def test_multpim_fa_4_cycles_with_complement():
+    prog = full_adder_program(preneg=True)
+    assert sum(1 for c in prog.cycles
+               if not c.is_init) == FA_CYCLES_MULTPIM_PRENEG
+    _check_fa(prog, preneg=True)
+    # the free next-carry complement (eq. (1) output) is exposed:
+    assert "cout_n" in prog.output_map
+
+
+def test_felix_fa_reference():
+    """Executable FELIX-gate-set FA; cited count is 6 (used in tables),
+    our verifiable construction is 7 — both disclosed."""
+    prog = felix_full_adder_program()
+    compute = sum(1 for c in prog.cycles if not c.is_init)
+    assert compute == 7 and FA_CYCLES_FELIX == 6
+    hist = prog.gate_histogram()
+    assert set(hist) <= {"NOT", "OR", "NAND", "INIT"}
+    _check_fa(prog)
+
+
+def test_fa_improvement_claim():
+    """Section IV-B1: 'improves FELIX by up to 33%': 6 -> 4 cycles."""
+    assert 1 - FA_CYCLES_MULTPIM_PRENEG / FA_CYCLES_FELIX == pytest.approx(
+        1 / 3, abs=1e-9)
+
+
+@pytest.mark.parametrize("n", [4, 8, 16, 32])
+def test_ripple_5n_and_3n5(n):
+    """Footnote 6: N-bit addition in 5N cycles with 3N+5 memristors."""
+    prog = ripple_adder(n, "multpim")
+    assert prog.n_cycles == 5 * n
+    assert prog.n_memristors == 3 * n + 5
+    rng = np.random.default_rng(n)
+    a = rng.integers(0, 1 << n, 64, dtype=np.uint64)
+    b = rng.integers(0, 1 << n, 64, dtype=np.uint64)
+    out = run_numpy(prog, {"a": to_bits(a, n), "b": to_bits(b, n)})
+    s = from_bits(out["s"])
+    co = out["cout"][:, 0]
+    for x, y, si, ci in zip(a, b, s, co):
+        full = int(x) + int(y)
+        assert int(si) == (full & ((1 << n) - 1)) and int(ci) == full >> n
+
+
+@pytest.mark.parametrize("n", [8, 16])
+def test_ripple_felix_correct_and_slower(n):
+    prog = ripple_adder(n, "felix")
+    fast = ripple_adder(n, "multpim")
+    assert prog.n_cycles > fast.n_cycles
+    rng = np.random.default_rng(n)
+    a = rng.integers(0, 1 << n, 32, dtype=np.uint64)
+    b = rng.integers(0, 1 << n, 32, dtype=np.uint64)
+    out = run_numpy(prog, {"a": to_bits(a, n), "b": to_bits(b, n)})
+    s = from_bits(out["s"])
+    for x, y, si in zip(a, b, s):
+        assert int(si) == (int(x) + int(y)) & ((1 << n) - 1)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 255), st.integers(0, 255))
+def test_ripple_property(a, b):
+    out = run_numpy(_ADD8, {"a": to_bits([a], 8), "b": to_bits([b], 8)})
+    got = int(from_bits(out["s"])[0]) + (int(out["cout"][0, 0]) << 8)
+    assert got == a + b
+
+
+_ADD8 = ripple_adder(8, "multpim")

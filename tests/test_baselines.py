@@ -1,0 +1,75 @@
+"""Baselines the paper compares against: Haj-Ali et al. and RIME."""
+import numpy as np
+import pytest
+
+from repro.core.baselines import (hajali_latency_formula, hajali_multiplier,
+                                  rime_latency_formula, rime_multiplier)
+from repro.core.bits import from_bits, to_bits
+from repro.core.executor import run_numpy
+from repro.core.multpim import multpim_latency_formula
+
+pytestmark = pytest.mark.core
+
+
+def test_cited_formulas_table1():
+    assert hajali_latency_formula(16) == 3110     # Table I
+    assert hajali_latency_formula(32) == 12870
+    assert rime_latency_formula(16) == 749
+    assert rime_latency_formula(32) == 2541
+
+
+def test_speedup_claims():
+    """4.2x over RIME, 21.1x over Haj-Ali at N=32 (abstract)."""
+    assert rime_latency_formula(32) / multpim_latency_formula(32) \
+        == pytest.approx(4.2, abs=0.05)
+    assert hajali_latency_formula(32) / multpim_latency_formula(32) \
+        == pytest.approx(21.1, abs=0.1)
+
+
+@pytest.mark.parametrize("maker,n", [(hajali_multiplier, 2),
+                                     (hajali_multiplier, 4),
+                                     (rime_multiplier, 2),
+                                     (rime_multiplier, 4)])
+def test_exhaustive(maker, n):
+    prog = maker(n)
+    a, b = np.meshgrid(np.arange(1 << n), np.arange(1 << n))
+    a, b = a.ravel(), b.ravel()
+    out = run_numpy(prog, {"a": to_bits(a, n), "b": to_bits(b, n)})
+    got = from_bits(out["out"])
+    assert all(int(g) == int(x) * int(y) for g, x, y in zip(got, a, b))
+
+
+@pytest.mark.parametrize("maker", [hajali_multiplier, rime_multiplier])
+def test_random_8bit(maker):
+    n = 8
+    prog = maker(n)
+    rng = np.random.default_rng(1)
+    a = rng.integers(0, 1 << n, 64)
+    b = rng.integers(0, 1 << n, 64)
+    out = run_numpy(prog, {"a": to_bits(a, n), "b": to_bits(b, n)})
+    got = from_bits(out["out"])
+    assert all(int(g) == int(x) * int(y) for g, x, y in zip(got, a, b))
+
+
+def test_hajali_gate_set():
+    """Haj-Ali assumes NOT/NOR only."""
+    hist = hajali_multiplier(8).gate_histogram()
+    assert set(hist) <= {"NOT", "NOR", "INIT"}
+
+
+def test_asymptotics():
+    """Quadratic baselines vs linear-log MultPIM: the headline claim."""
+    for maker, form in [(hajali_multiplier, hajali_latency_formula),
+                        (rime_multiplier, rime_latency_formula)]:
+        c8, c16 = maker(8).n_cycles, maker(16).n_cycles
+        assert c16 / c8 > 3.0          # ~quadratic growth
+    m8 = multpim_latency_formula(8)
+    m16 = multpim_latency_formula(16)
+    assert m16 / m8 < 2.4              # ~linear-log growth
+
+
+def test_multpim_beats_reconstructions():
+    for n in (8, 16):
+        m = multpim_latency_formula(n)
+        assert hajali_multiplier(n).n_cycles > 3 * m
+        assert rime_multiplier(n).n_cycles > 2 * m

@@ -1,0 +1,28 @@
+"""Dry-run path guard: one real cell lowers + compiles against the
+production 16x16 mesh in a subprocess (512 simulated devices)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+pytestmark = pytest.mark.infra
+
+
+def test_dryrun_single_cell(tmp_path):
+    out_json = tmp_path / "cell.json"
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "rwkv6-7b", "--shape", "long_500k",
+         "--out", str(out_json)],
+        capture_output=True, text=True, cwd=os.getcwd(), env=env,
+        timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    rec = json.load(open(out_json))[0]
+    assert rec["status"] == "ok"
+    assert rec["per_device"]["peak_bytes"] < 16 * 2 ** 30
+    assert rec["flops"] > 0

@@ -1,0 +1,140 @@
+"""MultPIM multiplier: Table I/II parity + bit-exactness (paper core)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bits import from_bits, to_bits
+from repro.core.executor import run_jax, run_numpy
+from repro.core.multpim import (multpim_area_formula, multpim_latency_formula,
+                                multpim_multiplier)
+
+pytestmark = pytest.mark.core
+
+
+@pytest.mark.parametrize("n", [2, 4, 8, 16, 32])
+def test_latency_matches_table1(n):
+    """Compiler-counted cycles == N*ceil(log2 N) + 14N + 3 (Table I)."""
+    prog = multpim_multiplier(n)
+    assert prog.n_cycles == multpim_latency_formula(n)
+
+
+def test_table1_values():
+    assert multpim_latency_formula(16) == 291     # paper Table I
+    assert multpim_latency_formula(32) == 611
+
+
+def test_table2_values():
+    assert multpim_area_formula(16) == 217        # paper Table II
+    assert multpim_area_formula(32) == 441
+
+
+@pytest.mark.parametrize("n", [4, 8, 16, 32])
+def test_area_close_to_table2(n):
+    """Compiler-counted memristors within 8% of Table II (we keep the top
+    partition generic and do not merge p_0/p_1; see DESIGN.md)."""
+    prog = multpim_multiplier(n)
+    cited = multpim_area_formula(n)
+    assert cited <= prog.n_memristors <= int(cited * 1.08) + 14
+
+
+@pytest.mark.parametrize("n", [2, 3, 4])
+def test_exhaustive_small(n):
+    prog = multpim_multiplier(n)
+    a, b = np.meshgrid(np.arange(1 << n), np.arange(1 << n))
+    a, b = a.ravel(), b.ravel()
+    out = run_numpy(prog, {"a": to_bits(a, n), "b": to_bits(b, n)})
+    got = from_bits(out["out"])
+    assert all(int(g) == int(x) * int(y) for g, x, y in zip(got, a, b))
+
+
+@pytest.mark.parametrize("n", [8, 16, 32, 64])
+def test_random_wide(n):
+    prog = multpim_multiplier(n)
+    rng = np.random.default_rng(n)
+    a = [int(x) for x in rng.integers(0, 2 ** min(n, 63), 32)]
+    b = [int(x) for x in rng.integers(0, 2 ** min(n, 63), 32)]
+    out = run_numpy(prog, {"a": to_bits(a, n), "b": to_bits(b, n)})
+    got = from_bits(out["out"])
+    mask = (1 << (2 * n)) - 1
+    assert all(int(g) == (x * y) & mask for g, x, y in zip(got, a, b))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2 ** 16 - 1), st.integers(0, 2 ** 16 - 1))
+def test_property_16bit(a, b):
+    prog = _PROG16
+    out = run_numpy(prog, {"a": to_bits([a], 16), "b": to_bits([b], 16)})
+    assert int(from_bits(out["out"])[0]) == a * b
+
+
+_PROG16 = multpim_multiplier(16)
+
+
+def test_jax_executor_parity():
+    n = 8
+    prog = multpim_multiplier(n)
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 1 << n, 64)
+    b = rng.integers(0, 1 << n, 64)
+    inp = {"a": to_bits(a, n), "b": to_bits(b, n)}
+    got_np = run_numpy(prog, inp)["out"]
+    got_jx = run_jax(prog, inp)["out"]
+    assert (np.asarray(got_jx) == got_np).all()
+
+
+def test_gate_set_is_not_min3_only():
+    """MultPIM uses only NOT/Min3 (+ INIT), the fair-comparison gate set."""
+    prog = multpim_multiplier(16)
+    hist = prog.gate_histogram()
+    assert set(hist) <= {"NOT", "MIN3", "INIT"}
+
+
+def test_validator_rejects_overlapping_spans():
+    from repro.core.isa import Gate, Op
+    from repro.core.program import Layout, ProgramBuilder
+    lay = Layout()
+    p0, p1, p2 = (lay.new_partition() for _ in range(3))
+    a = lay.add_cell(p0, "a")
+    b = lay.add_cell(p1, "b")
+    c = lay.add_cell(p2, "c")
+    d = lay.add_cell(p1, "d")
+    pb = ProgramBuilder(lay)
+    pb.declare_input("a", [a])
+    pb.declare_input("b", [b])
+    pb.declare_input("c", [c])
+    pb.init([d])
+    # span [p0..p2] overlaps span [p1..p1]
+    pb.cycle([Op(Gate.NOT, (a,), c), Op(Gate.NOT, (b,), d)])
+    with pytest.raises(ValueError, match="overlapping"):
+        pb.build()
+
+
+def test_validator_rejects_read_before_write():
+    from repro.core.isa import Gate, Op
+    from repro.core.program import Layout, ProgramBuilder
+    lay = Layout()
+    p = lay.new_partition()
+    a = lay.add_cell(p, "a")
+    b = lay.add_cell(p, "b")
+    pb = ProgramBuilder(lay)
+    pb.cycle([Op(Gate.NOT, (a,), b)])
+    with pytest.raises(ValueError, match="before any write"):
+        pb.build()
+
+
+@pytest.mark.parametrize("n", [4, 8, 16])
+def test_area_variant_bitexact_and_cheaper(n):
+    """MultPIM-Area: bit-exact, fewer memristors, more cycles, within
+    the cited N*log2N+23N+3 budget."""
+    from repro.core.multpim_area import multpim_area_multiplier
+    import math
+    pa = multpim_area_multiplier(n)
+    pm = multpim_multiplier(n)
+    assert pa.n_memristors < pm.n_memristors
+    assert pm.n_cycles < pa.n_cycles <= n * math.ceil(math.log2(n)) + 23 * n + 3
+    rng = np.random.default_rng(n)
+    a = rng.integers(0, 1 << n, 32)
+    b = rng.integers(0, 1 << n, 32)
+    out = run_numpy(pa, {"a": to_bits(a, n), "b": to_bits(b, n)})
+    got = from_bits(out["out"])
+    assert all(int(g) == int(x) * int(y) for g, x, y in zip(got, a, b))

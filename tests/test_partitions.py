@@ -1,0 +1,93 @@
+"""Section III partition techniques: log2(k) broadcast, 2-cycle shift."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.bits import to_bits
+from repro.core.executor import run_numpy
+from repro.core.isa import Gate, Op
+from repro.core.multpim import broadcast_schedule
+from repro.core.program import Layout, ProgramBuilder
+
+pytestmark = pytest.mark.core
+
+
+@pytest.mark.parametrize("k", [2, 4, 8, 16, 32, 5, 12])
+def test_broadcast_levels_log2(k):
+    levels = broadcast_schedule(k)
+    assert len(levels) == math.ceil(math.log2(k))
+    # every partition 1..k-1 receives exactly once
+    dsts = [d for lvl in levels for _, d in lvl]
+    assert sorted(dsts) == list(range(1, k))
+    # spans within a level are disjoint
+    for lvl in levels:
+        spans = sorted((min(s, d), max(s, d)) for s, d in lvl)
+        for (a1, b1), (a2, b2) in zip(spans, spans[1:]):
+            assert b1 < a2
+
+
+@pytest.mark.parametrize("k", [4, 8, 16])
+def test_broadcast_program_delivers_bit(k):
+    """Executable broadcast: one bit reaches all k partitions in
+    ceil(log2 k) compute cycles (polarity tracked per partition)."""
+    lay = Layout()
+    pids = [lay.new_partition() for _ in range(k)]
+    src = lay.add_cell(0, "src")
+    cells = {0: src}
+    for pid in pids[1:]:
+        cells[pid] = lay.add_cell(pid, "b")
+    pb = ProgramBuilder(lay)
+    pb.declare_input("x", [src])
+    pb.init([cells[p] for p in pids[1:]])
+    levels = broadcast_schedule(k)
+    parity = {0: 0}
+    for lvl in levels:
+        ops = []
+        for s, d in lvl:
+            ops.append(Op(Gate.NOT, (cells[s],), cells[d]))
+            parity[d] = parity[s] ^ 1
+        pb.cycle(ops)
+    for pid in pids[1:]:
+        pb.declare_output(f"p{pid}", [cells[pid]])
+    prog = pb.build()
+    compute = sum(1 for c in prog.cycles if not c.is_init)
+    assert compute == math.ceil(math.log2(k))       # the paper's claim
+    for bit in (0, 1):
+        out = run_numpy(prog, {"x": np.array([[bit]], np.uint8)})
+        for pid in pids[1:]:
+            got = int(out[f"p{pid}"][0, 0])
+            assert got == (bit ^ parity[pid])
+
+
+@pytest.mark.parametrize("k", [4, 8, 16])
+def test_shift_two_cycles(k):
+    """Executable 2-cycle shift: p_i's bit moves to p_{i+1} (complemented
+    once per hop via NOT; the test accounts for the polarity)."""
+    lay = Layout()
+    pids = [lay.new_partition() for _ in range(k)]
+    src = [lay.add_cell(p, "s") for p in pids]
+    dst = [lay.add_cell(p, "d") for p in pids]
+    pb = ProgramBuilder(lay)
+    pb.declare_input("x", src)
+    pb.init(dst)
+    # phase 1: even pids -> odd neighbours; phase 2: odd -> even.
+    pb.cycle([Op(Gate.NOT, (src[i],), dst[i + 1])
+              for i in range(0, k - 1, 2)])
+    pb.cycle([Op(Gate.NOT, (src[i],), dst[i + 1])
+              for i in range(1, k - 1, 2)])
+    pb.declare_output("y", dst[1:])
+    prog = pb.build()
+    assert sum(1 for c in prog.cycles if not c.is_init) == 2
+    rng = np.random.default_rng(0)
+    bits = rng.integers(0, 2, (5, k)).astype(np.uint8)
+    out = run_numpy(prog, {"x": bits})
+    assert (out["y"] == 1 - bits[:, :-1]).all()
+
+
+def test_naive_vs_fast_cycle_counts():
+    """The quantitative claim of Section III: k-1 vs log2(k) / 2."""
+    k = 32
+    assert math.ceil(math.log2(k)) == 5 and k - 1 == 31
+    # shift: 2 vs k-1 = 31
+    assert 2 < k - 1
