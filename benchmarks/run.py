@@ -3,7 +3,7 @@
 Prints ``name,us_per_call,derived`` CSV (the harness contract).
 
   PYTHONPATH=src python -m benchmarks.run [--section table1|table2|table3|
-                                           fa|sim|roofline|all]
+                                           fa|opt|sim|roofline|all]
 """
 from __future__ import annotations
 
@@ -25,6 +25,7 @@ def main() -> None:
         "table2": tables.table2_area,
         "table3": tables.table3_matvec,
         "fa": tables.fa_comparison,
+        "opt": tables.opt_pipeline,
         "sim": tables.sim_throughput,
         "pim_plan": tables.pim_plan_sweep,
         "energy": tables.energy_table,

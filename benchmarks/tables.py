@@ -106,7 +106,9 @@ def table3_matvec(n_elems=8, n_bits=32, exec_bits=8, exec_elems=4) -> List[Row]:
     A = rng.integers(0, 1 << (exec_bits - 2), (16, exec_elems))
     x = rng.integers(0, 1 << (exec_bits - 2), exec_elems)
     t0 = time.perf_counter()
-    res, cycles = matvec(A, x, exec_bits)
+    # paper-parity row: time the raw schedule, not the compiler cache
+    # (the `opt` section benchmarks the cached path separately).
+    res, cycles = matvec(A, x, exec_bits, use_compiler=False)
     us = (time.perf_counter() - t0) * 1e6
     want = A.astype(object) @ x.astype(object)
     ok = all(int(r) == int(w) for r, w in zip(res, want))
@@ -115,6 +117,53 @@ def table3_matvec(n_elems=8, n_bits=32, exec_bits=8, exec_elems=4) -> List[Row]:
                  f"measured_cycles={cycles};mac_core={mac.n_cycles};"
                  f"paper_per_product={matvec_latency_formula(1, exec_bits)};"
                  f"bitexact={ok}"))
+    return rows
+
+
+def opt_pipeline(n_values=(8, 16, 32)) -> List[Row]:
+    """repro.compiler section: optimized-vs-raw cycles/area for each real
+    program (differentially verified), plus compile-once cached matvec
+    throughput vs per-call rebuild."""
+    from repro.compiler import cache_stats, compile_cached
+    rows: List[Row] = []
+    for kind, ns in [("multpim", n_values), ("multpim_mac", (8, 16)),
+                     ("rime", (8, 16)), ("hajali", (4, 8))]:
+        for n in ns:
+            e = compile_cached(kind, n)
+            s = e.stats
+            rows.append((f"opt/{kind}/N={n}", 0.0,
+                         f"cycles={s.cycles_before}->{s.cycles_after};"
+                         f"cols={s.cols_before}->{s.cols_after};"
+                         f"inits_removed={s.init_sets_removed};"
+                         f"ops_hoisted={s.ops_hoisted};"
+                         f"verified={bool(e.verified)}"))
+    # compile-once cache vs per-call rebuild on repeated matvec traffic.
+    # N=16 keeps the per-call program build a substantial fraction of the
+    # call; min-of-trials suppresses scheduler noise.
+    rng = np.random.default_rng(7)
+    nb, ne, reps, trials = 16, 2, 3, 3
+    A = rng.integers(0, 1 << (nb - 2), (2, ne))
+    x = rng.integers(0, 1 << (nb - 2), ne)
+    matvec(A, x, nb)                      # warm the cache / fair start
+
+    def _best(use_compiler):
+        best = float("inf")
+        for _ in range(trials):
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                res, _ = matvec(A, x, nb, use_compiler=use_compiler)
+            best = min(best, (time.perf_counter() - t0) / reps * 1e6)
+        return best, res
+
+    us_uncached, res_u = _best(False)
+    us_cached, res_c = _best(True)
+    ok = all(int(p) == int(q) for p, q in zip(res_u, res_c))
+    st = cache_stats()
+    rows.append((f"opt/matvec-cache/n={ne},N={nb}", us_cached,
+                 f"uncached_us={us_uncached:.0f};cached_us={us_cached:.0f};"
+                 f"speedup={us_uncached / max(us_cached, 1e-9):.2f}x;"
+                 f"bitexact={ok};cache_hits={st['hits']};"
+                 f"cache_entries={st['entries']}"))
     return rows
 
 

@@ -1,0 +1,29 @@
+"""repro.compiler: optimizing pass pipeline + program cache for PIM schedules.
+
+Sits between the hand-written program builders (``core/multpim.py``,
+``core/matvec.py``, ``core/baselines.py``) and the executors
+(``core/executor.py``, ``kernels/``):
+
+* :mod:`.depgraph` / :mod:`.liveness` — def-use + live-segment analysis
+  across cycles under MAGIC read-modify-write semantics;
+* :mod:`.passes` — dead-INIT elimination, INIT coalescing, cycle
+  compaction, cell-lifetime column remapping (:func:`optimize`);
+* :mod:`.verify` — differential bit-exactness proof vs ``run_numpy``;
+* :mod:`.cache` — keyed compile->optimize->verify->pack memoization so
+  each ``(kind, n, flags, pass_config)`` compiles once per process and
+  the executors receive pre-packed, identity-stable tables.
+"""
+from .cache import (CompiledEntry, ProgramCache, cache_stats, clear_cache,
+                    compile_cached, register_builder)
+from .depgraph import DepGraph
+from .liveness import dead_sets, live_segments
+from .passes import OptStats, PassConfig, optimize
+from .verify import VerifyReport, verify_equivalence, verify_or_raise
+
+__all__ = [
+    "optimize", "PassConfig", "OptStats",
+    "DepGraph", "live_segments", "dead_sets",
+    "verify_equivalence", "verify_or_raise", "VerifyReport",
+    "compile_cached", "register_builder", "CompiledEntry", "ProgramCache",
+    "cache_stats", "clear_cache",
+]

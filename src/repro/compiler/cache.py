@@ -1,0 +1,151 @@
+"""Keyed compile -> optimize -> verify -> pack cache.
+
+Hand-written builders re-generate, re-validate and re-pack the same
+static schedule on every call — compile cost paid per request. This
+module makes compilation a once-per-key event: the first request for a
+``(kind, n, flags, pass_config)`` builds the program, runs the pass
+pipeline, differentially verifies the result against the unoptimized
+program, packs the dense executor tables, and memoizes everything; every
+later request returns the exact same :class:`CompiledEntry` (identical
+packed tables, zero rebuild cost). The JAX/Pallas executors therefore
+see stable array identities, which also keeps their jit caches warm.
+
+Thread-safe; keys are fully value-based so distinct flag/config combos
+coexist.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional, Tuple
+
+from repro.core.executor import PackedProgram, pack_program
+from repro.core.program import Program
+
+from .passes import OptStats, PassConfig, optimize
+from .verify import VerifyReport, verify_or_raise
+
+__all__ = ["CompiledEntry", "ProgramCache", "compile_cached",
+           "register_builder", "cache_stats", "clear_cache", "BUILDERS"]
+
+
+def _default_builders() -> Dict[str, Callable[..., Program]]:
+    # Imported lazily so repro.core never needs repro.compiler at import
+    # time (core modules call into the cache from function bodies only).
+    from repro.core.baselines import hajali_multiplier, rime_multiplier
+    from repro.core.matvec import multpim_mac
+    from repro.core.multpim import multpim_multiplier
+    from repro.core.multpim_area import multpim_area_multiplier
+    return {
+        "multpim": multpim_multiplier,
+        "multpim_mac": multpim_mac,
+        "hajali": hajali_multiplier,
+        "rime": rime_multiplier,
+        "multpim_area": multpim_area_multiplier,
+    }
+
+
+BUILDERS: Dict[str, Callable[..., Program]] = {}
+
+
+def register_builder(kind: str, builder: Callable[..., Program]) -> None:
+    """Expose a new program generator to :func:`compile_cached`.
+
+    Re-registering an existing kind evicts that kind's cached entries,
+    so the next compile uses the new builder."""
+    BUILDERS[kind] = builder
+    _GLOBAL.evict_kind(kind)
+
+
+@dataclass
+class CompiledEntry:
+    key: Tuple
+    raw: Program                  # as built (reference for verification)
+    program: Program              # after the pass pipeline
+    packed: PackedProgram         # dense tables for the scan/Pallas path
+    stats: OptStats
+    verified: Optional[VerifyReport] = None
+
+
+class ProgramCache:
+    def __init__(self):
+        self._entries: Dict[Tuple, CompiledEntry] = {}
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    def get_or_compile(self, kind: str, n: int, *,
+                       flags: Optional[Dict] = None,
+                       config: Optional[PassConfig] = None,
+                       verify: bool = True) -> CompiledEntry:
+        cfg = config or PassConfig()
+        fkey = tuple(sorted((flags or {}).items()))
+        key = (kind, n, fkey, cfg.key())
+        with self._lock:
+            ent = self._entries.get(key)
+            if ent is not None:
+                self.hits += 1
+            else:
+                self.misses += 1
+        if ent is None:
+            # Compile outside the lock (it can take a while for large
+            # n); racing compiles of the same key are idempotent —
+            # first to finish wins, others adopt it.
+            if kind not in BUILDERS:
+                for k, v in _default_builders().items():
+                    BUILDERS.setdefault(k, v)
+            if kind not in BUILDERS:
+                raise KeyError(f"unknown program kind '{kind}' "
+                               f"(known: {sorted(BUILDERS)})")
+            raw = BUILDERS[kind](n, **(flags or {}))
+            prog, stats = optimize(raw, cfg)
+            ent = CompiledEntry(key=key, raw=raw, program=prog,
+                                packed=pack_program(prog), stats=stats)
+            with self._lock:
+                ent = self._entries.setdefault(key, ent)
+        if verify and ent.verified is None:
+            # Verified lazily, once per entry; verify=False requests are
+            # happily served by an already-verified entry. A failed
+            # verification evicts the entry so nothing — including later
+            # verify=False calls — can be served a known-bad program.
+            try:
+                ent.verified = verify_or_raise(ent.raw, ent.program)
+            except Exception:
+                with self._lock:
+                    self._entries.pop(key, None)
+                raise
+        return ent
+
+    def evict_kind(self, kind: str) -> None:
+        with self._lock:
+            for key in [k for k in self._entries if k[0] == kind]:
+                del self._entries[key]
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {"entries": len(self._entries),
+                    "hits": self.hits, "misses": self.misses}
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self.hits = self.misses = 0
+
+
+_GLOBAL = ProgramCache()
+
+
+def compile_cached(kind: str, n: int, *, flags: Optional[Dict] = None,
+                   config: Optional[PassConfig] = None,
+                   verify: bool = True) -> CompiledEntry:
+    """Process-wide memoized compile of a named program generator."""
+    return _GLOBAL.get_or_compile(kind, n, flags=flags, config=config,
+                                  verify=verify)
+
+
+def cache_stats() -> Dict[str, int]:
+    return _GLOBAL.stats()
+
+
+def clear_cache() -> None:
+    _GLOBAL.clear()

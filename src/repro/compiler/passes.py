@@ -1,0 +1,278 @@
+"""Optimization passes over the Program IR.
+
+The pipeline (:func:`optimize`) runs, in order:
+
+1. **dead-INIT elimination** — drop SETs whose value is never observed
+   before the cell's next SET (or program end); init cycles that empty
+   out disappear, shrinking latency, and cells that were *only* ever
+   SET stop counting toward area.
+2. **INIT coalescing** — adjacent init cycles merge into one batched SET
+   (standard MAGIC accounting: one cycle regardless of cell count).
+3. **cycle compaction** — greedily hoist each op into the earliest
+   preceding compute cycle where (a) no intervening cycle writes the
+   op's inputs or output or reads its output, (b) the destination
+   cycle's engaged partition spans stay pairwise disjoint, and (c) no
+   other op already writes the same column there. Emptied cycles are
+   dropped. This is what reclaims e.g. RIME's trailing serial
+   ``s0 <- 0`` cycle per stage.
+4. **column remapping** — linear-scan allocation of live segments
+   (:mod:`.liveness`) onto same-partition columns whose lifetimes ended,
+   then a layout rebuild that drops unused columns. Inputs, outputs and
+   virgin-RMW segments are pinned.
+
+Every pass is independently toggleable via :class:`PassConfig`;
+:func:`optimize` re-validates the program after each pass, and callers
+are expected to run :mod:`.verify` for end-to-end differential proof.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.core.isa import Op
+from repro.core.program import Cycle, Layout, Program
+
+from .depgraph import DepGraph, cycle_reads, cycle_writes, find_seg_index, op_span
+from .liveness import Segment, dead_sets, live_segments
+
+__all__ = ["PassConfig", "OptStats", "optimize",
+           "eliminate_dead_inits", "coalesce_inits", "compact_cycles",
+           "remap_columns"]
+
+
+@dataclass(frozen=True)
+class PassConfig:
+    """Which passes run. Frozen so configs can key the program cache."""
+
+    dead_init: bool = True
+    coalesce: bool = True
+    compact: bool = True
+    remap: bool = True
+
+    def key(self) -> Tuple:
+        return (self.dead_init, self.coalesce, self.compact, self.remap)
+
+
+@dataclass
+class OptStats:
+    name: str = ""
+    cycles_before: int = 0
+    cycles_after: int = 0
+    cols_before: int = 0          # n_memristors (distinct used columns)
+    cols_after: int = 0
+    init_sets_removed: int = 0
+    init_cycles_merged: int = 0
+    ops_hoisted: int = 0
+    cycles_dropped: int = 0
+    cols_reused: int = 0
+
+    @property
+    def cycles_saved(self) -> int:
+        return self.cycles_before - self.cycles_after
+
+    @property
+    def cols_saved(self) -> int:
+        return self.cols_before - self.cols_after
+
+    def summary(self) -> str:
+        return (f"{self.name}: cycles {self.cycles_before}->"
+                f"{self.cycles_after}, cols {self.cols_before}->"
+                f"{self.cols_after} (inits-{self.init_sets_removed}, "
+                f"hoisted {self.ops_hoisted}, reused {self.cols_reused})")
+
+
+def _rebuild(prog: Program, cycles: List[Cycle],
+             layout: Optional[Layout] = None,
+             input_map: Optional[Dict[str, List[int]]] = None,
+             output_map: Optional[Dict[str, List[int]]] = None) -> Program:
+    return Program(layout=layout or prog.layout, cycles=cycles,
+                   input_map=input_map or prog.input_map,
+                   output_map=output_map or prog.output_map,
+                   name=prog.name)
+
+
+# ------------------------------------------------------- dead-INIT ----
+def eliminate_dead_inits(prog: Program, stats: OptStats) -> Program:
+    dead = set(dead_sets(prog))
+    if not dead:
+        return prog
+    cycles: List[Cycle] = []
+    for t, cyc in enumerate(prog.cycles):
+        if not cyc.is_init:
+            cycles.append(cyc)
+            continue
+        keep = [c for c in cyc.init_cells if (t, c) not in dead]
+        stats.init_sets_removed += len(cyc.init_cells) - len(keep)
+        if keep:
+            cycles.append(Cycle(init_cells=keep, note=cyc.note))
+        else:
+            stats.cycles_dropped += 1
+    return _rebuild(prog, cycles)
+
+
+# ------------------------------------------------------- coalescing ----
+def coalesce_inits(prog: Program, stats: OptStats) -> Program:
+    cycles: List[Cycle] = []
+    for cyc in prog.cycles:
+        if cyc.is_init and cycles and cycles[-1].is_init:
+            prev = cycles[-1]
+            merged = sorted(set(prev.init_cells) | set(cyc.init_cells))
+            note = prev.note if prev.note == cyc.note else \
+                f"{prev.note}+{cyc.note}"
+            cycles[-1] = Cycle(init_cells=merged, note=note)
+            stats.init_cycles_merged += 1
+            continue
+        cycles.append(cyc)
+    return _rebuild(prog, cycles)
+
+
+# ------------------------------------------------------- compaction ----
+def compact_cycles(prog: Program, stats: OptStats) -> Program:
+    lay = prog.layout
+    cycles = [Cycle(ops=list(c.ops), init_cells=list(c.init_cells),
+                    note=c.note) for c in prog.cycles]
+    reads = [cycle_reads(c) for c in cycles]
+    writes = [cycle_writes(c) for c in cycles]
+    spans: List[List[Tuple[int, int]]] = [
+        [op_span(lay, op) for op in c.ops] for c in cycles]
+    touched: List[Set[int]] = [{op.out for op in c.ops} for c in cycles]
+
+    def fits(u: int, span: Tuple[int, int], out: int) -> bool:
+        if cycles[u].is_init or out in touched[u]:
+            return False
+        lo, hi = span
+        return all(hi < a or lo > b for a, b in spans[u])
+
+    def refresh(t: int) -> None:
+        reads[t] = cycle_reads(cycles[t])
+        writes[t] = cycle_writes(cycles[t])
+        spans[t] = [op_span(lay, op) for op in cycles[t].ops]
+        touched[t] = {op.out for op in cycles[t].ops}
+
+    for t in range(len(cycles)):
+        if cycles[t].is_init:
+            continue
+        for op in list(cycles[t].ops):
+            cols = set(op.ins) | {op.out}
+            span = op_span(lay, op)
+            best = -1
+            u = t - 1
+            while u >= 0:
+                # Crossing cycle u requires: u neither writes any column
+                # the op reads/writes, nor reads the op's output (the op's
+                # write would become visible to u too early).
+                if writes[u] & cols or op.out in reads[u]:
+                    break
+                if fits(u, span, op.out):
+                    best = u
+                u -= 1
+            if best >= 0:
+                cycles[t].ops.remove(op)
+                cycles[best].ops.append(op)
+                stats.ops_hoisted += 1
+                refresh(t)
+                refresh(best)
+    kept = [c for c in cycles if c.ops or c.init_cells]
+    stats.cycles_dropped += len(cycles) - len(kept)
+    return _rebuild(prog, kept)
+
+
+# --------------------------------------------------- column remapping ----
+def remap_columns(prog: Program, stats: OptStats) -> Program:
+    lay = prog.layout
+    segs = live_segments(prog)
+    if not segs:
+        return prog
+    # Conservative per-column busy horizon: a column can host a foreign
+    # segment only after *all* of its own original segments are over, so
+    # placements can never collide with not-yet-processed native segments.
+    busy: Dict[int, int] = {col: max(s.end for s in lst)
+                            for col, lst in segs.items() if lst}
+    by_partition: Dict[int, List[int]] = {}
+    for col in busy:
+        by_partition.setdefault(lay.partition_of(col), []).append(col)
+    for cols in by_partition.values():
+        cols.sort()
+
+    ordered = sorted((s for lst in segs.values() for s in lst),
+                     key=lambda s: (s.start, s.end, s.col))
+    for s in ordered:
+        if s.pinned:
+            s.placed = s.col
+            busy[s.col] = max(busy[s.col], s.end)
+            continue
+        host = s.col
+        for cand in by_partition[s.pid]:
+            if cand != s.col and busy[cand] < s.start:
+                host = cand
+                break
+        if host != s.col:
+            stats.cols_reused += 1
+        s.placed = host
+        busy[host] = max(busy[host], s.end)
+
+    used_hosts = sorted({s.placed for lst in segs.values() for s in lst})
+    if len(used_hosts) == lay.n_cols and stats.cols_reused == 0:
+        return prog
+
+    new_lay = Layout()
+    for _ in range(lay.n_partitions):
+        new_lay.new_partition()
+    new_of: Dict[int, int] = {}
+    for old in used_hosts:
+        new_of[old] = new_lay.add_cell(lay.partition_of(old), f"c{old}")
+
+    starts = {col: [s.start for s in lst] for col, lst in segs.items()}
+
+    def mapped(col: int, t: int) -> int:
+        s = segs[col][find_seg_index(starts[col], t)]
+        return new_of[s.placed]
+
+    cycles: List[Cycle] = []
+    for t, cyc in enumerate(prog.cycles):
+        if cyc.is_init:
+            cycles.append(Cycle(
+                init_cells=sorted({mapped(c, t) for c in cyc.init_cells}),
+                note=cyc.note))
+            continue
+        ops = [replace(op, ins=tuple(mapped(c, t) for c in op.ins),
+                       out=mapped(op.out, t)) for op in cyc.ops]
+        cycles.append(Cycle(ops=ops, note=cyc.note))
+    T = prog.n_cycles
+    input_map = {k: [mapped(c, -1) for c in v]
+                 for k, v in prog.input_map.items()}
+    output_map = {k: [mapped(c, T) for c in v]
+                  for k, v in prog.output_map.items()}
+    return _rebuild(prog, cycles, layout=new_lay,
+                    input_map=input_map, output_map=output_map)
+
+
+# -------------------------------------------------------- pipeline ----
+def optimize(prog: Program, config: Optional[PassConfig] = None
+             ) -> Tuple[Program, OptStats]:
+    """Run the pass pipeline; returns (optimized program, stats).
+
+    The result is re-validated after every pass; use
+    :func:`repro.compiler.verify.verify_equivalence` for the differential
+    bit-exactness proof against the original.
+    """
+    cfg = config or PassConfig()
+    stats = OptStats(name=prog.name,
+                     cycles_before=prog.n_cycles,
+                     cols_before=prog.n_memristors)
+    cur = prog
+    if cfg.dead_init:
+        cur = eliminate_dead_inits(cur, stats)
+        cur.validate()
+    if cfg.coalesce:
+        cur = coalesce_inits(cur, stats)
+        cur.validate()
+    if cfg.compact:
+        cur = compact_cycles(cur, stats)
+        cur.validate()
+    if cfg.remap:
+        cur = remap_columns(cur, stats)
+        cur.validate()
+    stats.cycles_after = cur.n_cycles
+    stats.cols_after = cur.n_memristors
+    return cur, stats

@@ -133,17 +133,23 @@ def pack_program(prog: Program, pad_cols_to: Optional[int] = None) -> PackedProg
 
 
 def run_jax(prog: Program, inputs: Dict[str, np.ndarray], *,
-            use_pallas: bool = False, interpret: bool = True
+            use_pallas: bool = False, interpret: bool = True,
+            packed: Optional[PackedProgram] = None
             ) -> Dict[str, np.ndarray]:
     """Execute with JAX. Semantically identical to :func:`run_numpy`.
 
     ``use_pallas`` routes the per-cycle gate application through the
-    Pallas TPU kernel (interpret mode on CPU).
+    Pallas TPU kernel (interpret mode on CPU). Pass ``packed`` (e.g. a
+    :mod:`repro.compiler.cache` entry's tables) to skip re-packing the
+    schedule. (Each call still traces its own jitted scan; callers
+    wanting amortized compilation should drive
+    :func:`repro.kernels.ops.crossbar_run` with the cached tables.)
     """
     import jax
     import jax.numpy as jnp
 
-    packed = pack_program(prog)
+    if packed is None:
+        packed = pack_program(prog)
     first = next(iter(inputs.values()))
     R = first.shape[0]
     state = np.zeros((R, packed.init_mask.shape[1]), dtype=np.uint8)

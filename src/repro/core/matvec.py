@@ -39,7 +39,7 @@ from .isa import Gate, Op
 from .multpim import _Unit, broadcast_schedule
 from .program import Layout, Program, ProgramBuilder
 
-__all__ = ["multpim_mac", "mac_run", "inner_product", "matvec",
+__all__ = ["multpim_mac", "compiled_mac", "mac_run", "inner_product", "matvec",
            "mac_latency_formula", "matvec_latency_formula",
            "floatpim_matvec_latency", "matvec_area_formula",
            "floatpim_matvec_area", "STAGING_CYCLES"]
@@ -223,16 +223,27 @@ def mac_run(prog: Program, n: int, a, b, s_i, c_i) -> Tuple[np.ndarray, np.ndarr
     return lo, s_hi, c_hi
 
 
-def inner_product(a_vec, x_vec, n: int) -> Tuple[np.ndarray, int]:
+def compiled_mac(n: int) -> Program:
+    """The MAC program via the repro.compiler pipeline: built, optimized,
+    differentially verified and memoized once per ``n`` — repeated
+    matvec/inner_product calls skip the rebuild entirely."""
+    from repro.compiler.cache import compile_cached   # lazy: no core->compiler import cycle
+    return compile_cached("multpim_mac", n).program
+
+
+def inner_product(a_vec, x_vec, n: int, *,
+                  use_compiler: bool = True) -> Tuple[np.ndarray, int]:
     """Full-precision fixed-point inner product per crossbar row.
 
     ``a_vec``/``x_vec``: (rows, n_elems) unsigned ints. Returns
     (rows,)-int result mod 2^(2n) and the total charged cycle count
     (MAC cycles measured + staging budget + final 2N-bit recombination).
+    ``use_compiler=False`` rebuilds the raw program per call (the
+    pre-compiler behavior, kept for benchmarking the cache).
     """
     a_vec = np.asarray(a_vec, dtype=object)
     R, E = a_vec.shape
-    prog = multpim_mac(n)
+    prog = compiled_mac(n) if use_compiler else multpim_mac(n)
     s = np.zeros(R, dtype=object)
     c = np.zeros(R, dtype=object)
     cycles = 0
@@ -251,10 +262,10 @@ def inner_product(a_vec, x_vec, n: int) -> Tuple[np.ndarray, int]:
     return res, cycles
 
 
-def matvec(A, x, n: int) -> Tuple[np.ndarray, int]:
+def matvec(A, x, n: int, *, use_compiler: bool = True) -> Tuple[np.ndarray, int]:
     """A (m, e) ints, x (e,) ints -> (m,) inner products (each row is an
     independent crossbar row, exactly the paper's Fig. 5 layout)."""
     A = np.asarray(A, dtype=object)
     m, e = A.shape
     X = np.tile(np.asarray(x, dtype=object)[None, :], (m, 1))
-    return inner_product(A, X, n)
+    return inner_product(A, X, n, use_compiler=use_compiler)

@@ -39,7 +39,8 @@ from typing import Dict, List, Optional, Tuple
 from .isa import Gate, Op
 from .program import Layout, Program, ProgramBuilder
 
-__all__ = ["multpim_multiplier", "broadcast_schedule", "multpim_latency_formula",
+__all__ = ["multpim_multiplier", "multpim_multiplier_compiled",
+           "broadcast_schedule", "multpim_latency_formula",
            "multpim_area_formula"]
 
 
@@ -73,6 +74,17 @@ def broadcast_schedule(n: int) -> List[List[Tuple[int, int]]]:
     if n > 1:
         cover(0, n - 1, 0, 0)
     return levels
+
+
+def multpim_multiplier_compiled(n: int, skip_last_stages: bool = False) -> Program:
+    """:func:`multpim_multiplier` routed through the repro.compiler
+    pipeline: optimized, differentially verified against the raw build
+    and memoized per ``(n, flags)`` — see :mod:`repro.compiler.cache`."""
+    from repro.compiler.cache import compile_cached   # lazy: avoids import cycle
+    return compile_cached(
+        "multpim", n,
+        flags={"skip_last_stages": True} if skip_last_stages else None,
+    ).program
 
 
 @dataclass

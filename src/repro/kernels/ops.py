@@ -13,7 +13,7 @@ from .bitserial_matmul import bitserial_matmul_pallas
 from .crossbar_step import crossbar_run_pallas
 from .ref import bitserial_matmul_ref, crossbar_run_ref
 
-__all__ = ["crossbar_run", "bitserial_matmul",
+__all__ = ["crossbar_run", "crossbar_run_cached", "bitserial_matmul",
            "crossbar_run_ref", "bitserial_matmul_ref"]
 
 
@@ -24,6 +24,22 @@ def crossbar_run(state_bits: jnp.ndarray, packed: PackedProgram, *,
         return crossbar_run_pallas(state_bits, packed,
                                    row_block=row_block, interpret=interpret)
     return crossbar_run_ref(state_bits, packed)
+
+
+def crossbar_run_cached(state_bits: jnp.ndarray, kind: str, n: int, *,
+                        flags=None, use_pallas: bool = True,
+                        interpret: bool = True, row_block: int = 256
+                        ) -> jnp.ndarray:
+    """Run a named program from the repro.compiler cache: the schedule is
+    built, optimized, verified and packed once per ``(kind, n, flags)``;
+    this call only pays the crossbar step itself. ``state_bits`` must be
+    ``(rows, packed.init_mask.shape[1])`` — see
+    :func:`repro.compiler.cache.compile_cached` for the entry's layout.
+    """
+    from repro.compiler.cache import compile_cached
+    entry = compile_cached(kind, n, flags=flags)
+    return crossbar_run(state_bits, entry.packed, use_pallas=use_pallas,
+                        interpret=interpret, row_block=row_block)
 
 
 def bitserial_matmul(x: jnp.ndarray, w: jnp.ndarray, n_bits: int = 8, *,

@@ -187,6 +187,12 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    # jax returns one dict, a list of per-executable dicts, or None
+    # depending on version/backend — normalize to a single dict.
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    elif cost is None:
+        cost = {}
     coll = collective_bytes(compiled.as_text())
     rec = {
         "arch": arch, "shape": shape_name,

@@ -15,13 +15,13 @@ Every block is a pair of pure functions:
 * RWKV-6 ('r', rwkv): {"wkv": (B, H, dh, dh), "tshift"/"cshift": (B, D)}
 * MoE ('m'/'d'): same as attention (the FFN is stateless).
 
-MoE dispatch is capacity-bounded scatter->dense-expert-GEMM->gather
-(FLOPs-free dispatch; the expert GEMMs shard over the 'model' axis as
-(E, C, D) x (E, D, F)).
+MoE dispatch is dropless sort->grouped-GEMM->gather (ragged per-expert
+segments via ``jax.lax.ragged_dot``; the expert weight stacks shard over
+the 'model' axis as (E, D, F)). Dropless keeps the layer
+token-independent, so prefill and decode agree bit-for-bit.
 """
 from __future__ import annotations
 
-import math
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -32,9 +32,7 @@ from repro.configs.base import ModelConfig
 from .attention import KVCache, attend, decode_attend
 from .layers import Initializer, gelu_mlp, rms_norm, rope, softcap, swiglu
 
-__all__ = ["init_block", "apply_block", "init_state", "CAPACITY_FACTOR"]
-
-CAPACITY_FACTOR = 1.25
+__all__ = ["init_block", "apply_block", "init_state"]
 
 
 # ============================================================ attention ====
@@ -162,10 +160,11 @@ MOE_CHUNK = 32768   # PERF(H3): cap tokens per dispatch so the (E, C, D)
 
 
 def moe_ffn(cfg: ModelConfig, p, x3: jnp.ndarray) -> jnp.ndarray:
-    """Capacity-bounded top-k expert FFN over (B, S, D); long sequences
-    are dispatched in chunks *along S* — the batch axis keeps its data
-    sharding in every chunk, so all devices stay active and the (E,C,D)
-    capacity buffers are O(chunk) (PERF(H3): 1M-token MoE prefills)."""
+    """Dropless top-k expert FFN over (B, S, D); long sequences are
+    dispatched in chunks *along S* — the batch axis keeps its data
+    sharding in every chunk, so all devices stay active and the sorted
+    (T*k, D) dispatch activations stay O(chunk)
+    (PERF(H3): 1M-token MoE prefills)."""
     b, s, d = x3.shape
     sc = max(1, MOE_CHUNK // max(1, b))
     if s > sc and s % sc == 0:
@@ -178,35 +177,34 @@ def moe_ffn(cfg: ModelConfig, p, x3: jnp.ndarray) -> jnp.ndarray:
 
 
 def _moe_ffn_chunk(cfg: ModelConfig, p, x2: jnp.ndarray) -> jnp.ndarray:
+    """Dropless dispatch: sort token-expert pairs by expert, then grouped
+    GEMMs over the ragged per-expert segments (``jax.lax.ragged_dot``).
+
+    Dropless matters for correctness, not just quality: a capacity
+    bound makes a token's output depend on the *other* tokens in the
+    dispatch (whoever overflows the expert loses its contribution), so
+    prefill and token-by-token decode disagree. Here every routed pair
+    is computed, so the layer is token-independent and prefill ==
+    decode exactly. Memory stays O(T*k) activations — same order as the
+    old (E, C, D) capacity buffers at capacity factor 1.25.
+    """
     e = cfg.moe
     t, d = x2.shape
     logits = x2 @ p["router"]
     gate, idx = jax.lax.top_k(logits, e.top_k)            # (T, k)
     gate = jax.nn.softmax(gate.astype(jnp.float32), axis=-1).astype(x2.dtype)
 
-    cap = int(math.ceil(t * e.top_k / e.n_experts * CAPACITY_FACTOR))
-    cap = max(cap, e.top_k)
     flat_e = idx.reshape(-1)                               # (T*k,)
     flat_t = jnp.repeat(jnp.arange(t), e.top_k)
-    flat_g = gate.reshape(-1)
-    order = jnp.argsort(flat_e)
-    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
-    counts = jnp.bincount(flat_e, length=e.n_experts)
-    starts = jnp.concatenate([jnp.zeros(1, counts.dtype),
-                              jnp.cumsum(counts)[:-1]])
-    rank = jnp.arange(t * e.top_k) - starts[se]
-    keep = rank < cap
-    slot_e = jnp.where(keep, se, e.n_experts - 1)
-    slot_c = jnp.where(keep, rank, cap - 1)
+    order = jnp.argsort(flat_e)                            # stable
+    st, sg = flat_t[order], gate.reshape(-1)[order]
+    counts = jnp.bincount(flat_e, length=e.n_experts).astype(jnp.int32)
 
-    buf = jnp.zeros((e.n_experts, cap, d), x2.dtype)
-    buf = buf.at[slot_e, slot_c].add(jnp.where(keep[:, None], x2[st], 0))
-    h = jnp.einsum("ecd,edf->ecf", buf, p["we1"])
-    h3 = jnp.einsum("ecd,edf->ecf", buf, p["we3"])
-    h = jax.nn.silu(h) * h3
-    y = jnp.einsum("ecf,efd->ecd", h, p["we2"])
-    tok_y = y[slot_e, slot_c] * jnp.where(keep, sg, 0)[:, None]
-    out = jnp.zeros_like(x2).at[st].add(tok_y)
+    xs = x2[st]                                            # (T*k, d)
+    h = jax.lax.ragged_dot(xs, p["we1"], counts)
+    h3 = jax.lax.ragged_dot(xs, p["we3"], counts)
+    y = jax.lax.ragged_dot(jax.nn.silu(h) * h3, p["we2"], counts)
+    out = jnp.zeros_like(x2).at[st].add(y * sg[:, None])
     if e.n_shared:
         out = out + _apply_mlp(cfg, p["shared"], x2)
     return out

@@ -1,0 +1,72 @@
+"""Property-testing shim: hypothesis when installed, seeded sampling else.
+
+The property tests only need ``given``/``settings`` and the
+``st.integers`` / ``st.lists`` strategies. With hypothesis installed
+(``pip install -r requirements-dev.txt``) you get the real engine —
+shrinking, the example database, the works. Without it, ``given`` runs
+the test body over a fixed-seed random sample of the same strategy
+space, so ``pytest`` stays green (deterministically) on minimal
+containers.
+"""
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:      # fixed-seed fallback
+    import functools
+    import hashlib
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_EXAMPLES = 20
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    class st:  # noqa: N801 — mirrors `from hypothesis import strategies as st`
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                size = int(rng.integers(min_size, max_size + 1))
+                return [elements.example(rng) for _ in range(size)]
+            return _Strategy(draw)
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_kw):
+        def deco(fn):
+            fn._prop_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies, **kw_strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper():
+                n = getattr(wrapper, "_prop_max_examples",
+                            _DEFAULT_EXAMPLES)
+                seed = int.from_bytes(
+                    hashlib.sha256(fn.__qualname__.encode()).digest()[:4],
+                    "little")
+                rng = np.random.default_rng(seed)
+                for _ in range(n):
+                    args = [s.example(rng) for s in strategies]
+                    kwargs = {k: s.example(rng)
+                              for k, s in kw_strategies.items()}
+                    fn(*args, **kwargs)
+            # strategy args are provided here, not by pytest fixtures —
+            # drop functools.wraps' __wrapped__ so pytest sees a 0-arg test
+            del wrapper.__wrapped__
+            return wrapper
+        return deco
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

@@ -3,7 +3,7 @@ import itertools
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.core.adders import (FA_CYCLES_FELIX, FA_CYCLES_MULTPIM,
                                FA_CYCLES_MULTPIM_PRENEG,

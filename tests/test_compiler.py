@@ -1,0 +1,197 @@
+"""repro.compiler: pass pipeline, differential verify, program cache."""
+import numpy as np
+import pytest
+
+from repro.compiler import (PassConfig, cache_stats, clear_cache,
+                            compile_cached, dead_sets, optimize,
+                            verify_equivalence, verify_or_raise)
+from repro.core.baselines import hajali_multiplier, rime_multiplier
+from repro.core.bits import from_bits, to_bits
+from repro.core.executor import pack_program, run_jax, run_numpy
+from repro.core.isa import Gate, Op
+from repro.core.matvec import matvec, multpim_mac
+from repro.core.multpim import (multpim_latency_formula, multpim_multiplier,
+                                multpim_multiplier_compiled)
+from repro.core.program import Layout, ProgramBuilder
+
+pytestmark = pytest.mark.core
+
+
+# ------------------------------------------------ tiny hand-built IR ----
+def _tiny_dead_init():
+    lay = Layout()
+    p = lay.new_partition()
+    a = lay.add_cell(p, "a")
+    b = lay.add_cell(p, "b")
+    c = lay.add_cell(p, "c")          # SET but never observed
+    pb = ProgramBuilder(lay, name="tiny_dead")
+    pb.declare_input("a", [a])
+    pb.init([b, c], note="setup")
+    pb.cycle([Op(Gate.NOT, (a,), b)], note="not")
+    pb.declare_output("o", [b])
+    return pb.build()
+
+
+def _tiny_compactable():
+    lay = Layout()
+    p0, p1 = lay.new_partition(), lay.new_partition()
+    a = lay.add_cell(p0, "a")
+    t = lay.add_cell(p0, "t")
+    u = lay.add_cell(p1, "u")
+    v = lay.add_cell(p1, "v")
+    pb = ProgramBuilder(lay, name="tiny_compact")
+    pb.declare_input("a", [a])
+    pb.declare_input("u", [u])
+    pb.init([t, v], note="setup")
+    # independent, span-disjoint ops scheduled in separate cycles:
+    pb.cycle([Op(Gate.NOT, (a,), t)], note="p0")
+    pb.cycle([Op(Gate.NOT, (u,), v)], note="p1")
+    pb.declare_output("o", [t, v])
+    return pb.build()
+
+
+def _tiny_remappable():
+    lay = Layout()
+    p = lay.new_partition()
+    a = lay.add_cell(p, "a")
+    t = lay.add_cell(p, "t")          # dead after cycle 3
+    u = lay.add_cell(p, "u")          # born at cycle 4 -> can live in t
+    o = lay.add_cell(p, "o")
+    pb = ProgramBuilder(lay, name="tiny_remap")
+    pb.declare_input("a", [a])
+    pb.init([t])
+    pb.cycle([Op(Gate.NOT, (a,), t)])
+    pb.init([o])
+    pb.cycle([Op(Gate.NOT, (t,), o)])
+    pb.init([u])
+    pb.cycle([Op(Gate.NOT, (u,), o)])
+    pb.declare_output("o", [o])
+    return pb.build()
+
+
+def test_dead_init_analysis_and_pass():
+    prog = _tiny_dead_init()
+    dead = dead_sets(prog)
+    assert dead == [(0, 2)]           # (cycle 0, col of 'c')
+    opt, st = optimize(prog)
+    assert st.init_sets_removed == 1
+    assert opt.n_memristors == prog.n_memristors - 1
+    verify_or_raise(prog, opt)
+
+
+def test_compaction_merges_disjoint_spans():
+    prog = _tiny_compactable()
+    opt, st = optimize(prog)
+    assert st.ops_hoisted == 1 and opt.n_cycles == prog.n_cycles - 1
+    verify_or_raise(prog, opt)
+
+
+def test_remap_reuses_dead_column():
+    prog = _tiny_remappable()
+    opt, st = optimize(prog, PassConfig(compact=False))
+    assert st.cols_reused >= 1
+    assert opt.n_memristors < prog.n_memristors
+    assert opt.layout.n_cols < prog.layout.n_cols
+    verify_or_raise(prog, opt)
+
+
+def test_all_passes_off_is_identity():
+    prog = multpim_multiplier(4)
+    opt, st = optimize(prog, PassConfig(False, False, False, False))
+    assert opt.n_cycles == prog.n_cycles
+    assert opt.n_memristors == prog.n_memristors
+    assert st.cycles_saved == 0 and st.cols_saved == 0
+
+
+# ------------------------------------------------- real programs ----
+@pytest.mark.parametrize("n", [4, 8, 16, 32])
+def test_optimized_multpim_within_table1(n):
+    """Golden: optimized cycle count never exceeds the Table I closed
+    form (the hand schedule is compaction-tight, so today it's equal)."""
+    opt, st = optimize(multpim_multiplier(n))
+    assert opt.n_cycles <= multpim_latency_formula(n)
+    assert st.cols_after <= st.cols_before
+
+
+@pytest.mark.parametrize("maker,n", [
+    (multpim_multiplier, 8),
+    (multpim_mac, 8),
+    (hajali_multiplier, 4),
+    (rime_multiplier, 8),
+])
+def test_verify_passes_for_real_programs(maker, n):
+    raw = maker(n)
+    opt, _ = optimize(raw)
+    rep = verify_equivalence(raw, opt)
+    assert rep.ok, rep.mismatches
+
+
+def test_rime_compaction_win():
+    """The pipeline removes real cycles from the serial-movement baseline
+    (it rediscovers MultPIM's two-phase shift on RIME's bottleneck)."""
+    raw = rime_multiplier(8)
+    opt, st = optimize(raw)
+    assert opt.n_cycles < raw.n_cycles
+    assert st.ops_hoisted > 0
+    verify_or_raise(raw, opt)
+
+
+def test_optimized_multpim_still_multiplies():
+    n = 8
+    opt, _ = optimize(multpim_multiplier(n))
+    rng = np.random.default_rng(5)
+    a = rng.integers(0, 1 << n, 50)
+    b = rng.integers(0, 1 << n, 50)
+    out = run_numpy(opt, {"a": to_bits(a, n), "b": to_bits(b, n)})
+    assert all(int(g) == int(x) * int(y)
+               for g, x, y in zip(from_bits(out["out"]), a, b))
+
+
+# ------------------------------------------------------- cache ----
+def test_cache_returns_identical_packed_tables():
+    clear_cache()
+    e1 = compile_cached("multpim", 8)
+    e2 = compile_cached("multpim", 8)
+    assert e1 is e2                   # one compile, shared entry
+    st = cache_stats()
+    assert st["hits"] == 1 and st["misses"] == 1
+    # tables match a fresh pack of the optimized program bit-for-bit
+    fresh = pack_program(e1.program)
+    np.testing.assert_array_equal(e1.packed.gate_id, fresh.gate_id)
+    np.testing.assert_array_equal(e1.packed.in_cols, fresh.in_cols)
+    np.testing.assert_array_equal(e1.packed.out_col, fresh.out_col)
+    np.testing.assert_array_equal(e1.packed.init_mask, fresh.init_mask)
+
+
+def test_cache_distinguishes_flags_and_config():
+    clear_cache()
+    e1 = compile_cached("multpim", 8)
+    e2 = compile_cached("multpim", 8, flags={"skip_last_stages": True})
+    e3 = compile_cached("multpim", 8, config=PassConfig(remap=False))
+    assert e1 is not e2 and e1 is not e3
+    assert set(e2.program.output_map) == {"lo", "s_latch", "c_latch",
+                                          "cn_latch"}
+
+
+def test_compiled_wrapper_and_jax_executor_agree():
+    n = 4
+    prog = multpim_multiplier_compiled(n)
+    entry = compile_cached("multpim", n)
+    assert prog is entry.program
+    rng = np.random.default_rng(9)
+    a = rng.integers(0, 1 << n, 32)
+    b = rng.integers(0, 1 << n, 32)
+    inp = {"a": to_bits(a, n), "b": to_bits(b, n)}
+    out = run_jax(prog, inp, packed=entry.packed)
+    assert all(int(g) == int(x) * int(y)
+               for g, x, y in zip(from_bits(out["out"]), a, b))
+
+
+def test_matvec_through_cache_is_exact():
+    rng = np.random.default_rng(11)
+    A = rng.integers(0, 63, (6, 3))
+    x = rng.integers(0, 63, 3)
+    res, cycles = matvec(A, x, 8)
+    want = A.astype(object) @ x.astype(object)
+    assert all(int(r) == int(w) for r, w in zip(res, want))
+    assert cycles > 0

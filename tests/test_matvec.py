@@ -1,7 +1,7 @@
 """Section VI: fused MAC + full-precision matrix-vector multiplication."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.core.matvec import (floatpim_matvec_area, floatpim_matvec_latency,
                                inner_product, mac_run, matvec,

@@ -1,7 +1,7 @@
 """MultPIM multiplier: Table I/II parity + bit-exactness (paper core)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.core.bits import from_bits, to_bits
 from repro.core.executor import run_jax, run_numpy

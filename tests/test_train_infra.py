@@ -169,9 +169,9 @@ def test_data_determinism_and_sharding():
 
 
 def test_sharding_rules_divisibility_guard():
-    from jax.sharding import AbstractMesh, PartitionSpec as P
-    from repro.train.sharding import spec_for_leaf, zero1_spec
-    mesh = AbstractMesh((16, 16), ("data", "model"))
+    from jax.sharding import PartitionSpec as P
+    from repro.train.sharding import abstract_mesh, spec_for_leaf, zero1_spec
+    mesh = abstract_mesh((16, 16), ("data", "model"))
     # divisible dims shard; a 3-wide dim can't shard over 16:
     assert spec_for_leaf(mesh, "wk", (6144, 3)) == P(None, None)
     assert spec_for_leaf(mesh, "wk", (6144, 128)) == P(None, "model")
