@@ -20,7 +20,7 @@ from repro.core.baselines import (hajali_latency_formula, hajali_multiplier,
 from repro.core.bits import from_bits, to_bits
 from repro.core.costmodel import ALGOS
 from repro.core.executor import run_numpy
-from repro.core.matvec import (floatpim_matvec_latency, matvec,
+from repro.core.matvec import (floatpim_matvec_latency,
                                matvec_area_formula, matvec_latency_formula,
                                floatpim_matvec_area, multpim_mac)
 from repro.core.multpim import multpim_multiplier
@@ -105,10 +105,11 @@ def table3_matvec(n_elems=8, n_bits=32, exec_bits=8, exec_elems=4) -> List[Row]:
     rng = np.random.default_rng(1)
     A = rng.integers(0, 1 << (exec_bits - 2), (16, exec_elems))
     x = rng.integers(0, 1 << (exec_bits - 2), exec_elems)
+    from repro.engine import get_engine
     t0 = time.perf_counter()
     # paper-parity row: time the raw schedule, not the compiler cache
     # (the `opt` section benchmarks the cached path separately).
-    res, cycles = matvec(A, x, exec_bits, use_compiler=False)
+    res, cycles = get_engine().matvec(A, x, exec_bits, use_compiler=False)
     us = (time.perf_counter() - t0) * 1e6
     want = A.astype(object) @ x.astype(object)
     ok = all(int(r) == int(w) for r, w in zip(res, want))
@@ -121,15 +122,16 @@ def table3_matvec(n_elems=8, n_bits=32, exec_bits=8, exec_elems=4) -> List[Row]:
 
 
 def opt_pipeline(n_values=(8, 16, 32)) -> List[Row]:
-    """repro.compiler section: optimized-vs-raw cycles/area for each real
-    program (differentially verified), plus compile-once cached matvec
-    throughput vs per-call rebuild."""
-    from repro.compiler import cache_stats, compile_cached
+    """repro.compiler section through the engine API: optimized-vs-raw
+    cycles/area for each real program (differentially verified), plus
+    compile-once cached matvec throughput vs per-call rebuild."""
+    from repro.engine import get_engine
+    eng = get_engine()
     rows: List[Row] = []
     for kind, ns in [("multpim", n_values), ("multpim_mac", (8, 16)),
                      ("rime", (8, 16)), ("hajali", (4, 8))]:
         for n in ns:
-            e = compile_cached(kind, n)
+            e = eng.compile(kind, n).entry
             s = e.stats
             rows.append((f"opt/{kind}/N={n}", 0.0,
                          f"cycles={s.cycles_before}->{s.cycles_after};"
@@ -144,21 +146,21 @@ def opt_pipeline(n_values=(8, 16, 32)) -> List[Row]:
     nb, ne, reps, trials = 16, 2, 3, 3
     A = rng.integers(0, 1 << (nb - 2), (2, ne))
     x = rng.integers(0, 1 << (nb - 2), ne)
-    matvec(A, x, nb)                      # warm the cache / fair start
+    eng.matvec(A, x, nb)                  # warm the cache / fair start
 
     def _best(use_compiler):
         best = float("inf")
         for _ in range(trials):
             t0 = time.perf_counter()
             for _ in range(reps):
-                res, _ = matvec(A, x, nb, use_compiler=use_compiler)
+                res, _ = eng.matvec(A, x, nb, use_compiler=use_compiler)
             best = min(best, (time.perf_counter() - t0) / reps * 1e6)
         return best, res
 
     us_uncached, res_u = _best(False)
     us_cached, res_c = _best(True)
     ok = all(int(p) == int(q) for p, q in zip(res_u, res_c))
-    st = cache_stats()
+    st = eng.stats()
     rows.append((f"opt/matvec-cache/n={ne},N={nb}", us_cached,
                  f"uncached_us={us_uncached:.0f};cached_us={us_cached:.0f};"
                  f"speedup={us_uncached / max(us_cached, 1e-9):.2f}x;"
@@ -192,27 +194,21 @@ def fa_comparison() -> List[Row]:
 def sim_throughput() -> List[Row]:
     """Simulator throughput: rows/s across executors (numpy / jax scan /
     Pallas interpret) — the reproduction's own perf."""
-    import jax.numpy as jnp
-    from repro.core.executor import pack_program, run_jax
+    from repro.engine import get_engine
     rows: List[Row] = []
     n = 16
-    prog = multpim_multiplier(n)
+    eng = get_engine()
+    exe = eng.compile("multpim", n)
     rng = np.random.default_rng(0)
     R = 4096
-    a = rng.integers(0, 1 << n, R)
-    b = rng.integers(0, 1 << n, R)
-    inp = {"a": to_bits(a, n), "b": to_bits(b, n)}
-    t0 = time.perf_counter()
-    run_numpy(prog, inp)
-    t_np = time.perf_counter() - t0
-    rows.append((f"sim/numpy/N={n}", t_np * 1e6,
-                 f"rows_per_s={R/t_np:.0f};mults_per_s={R/t_np:.0f}"))
-    run_jax(prog, inp)  # warm compile
-    t0 = time.perf_counter()
-    run_jax(prog, inp)
-    t_jx = time.perf_counter() - t0
-    rows.append((f"sim/jax-scan/N={n}", t_jx * 1e6,
-                 f"rows_per_s={R/t_jx:.0f}"))
+    batch = {"a": rng.integers(0, 1 << n, R), "b": rng.integers(0, 1 << n, R)}
+    for backend in ("numpy", "jax"):
+        exe.run(batch, backend=backend)   # warm (jit compile for jax)
+        t0 = time.perf_counter()
+        exe.run(batch, backend=backend)
+        dt = time.perf_counter() - t0
+        rows.append((f"sim/{backend}/N={n}", dt * 1e6,
+                     f"rows_per_s={R/dt:.0f};mults_per_s={R/dt:.0f}"))
     return rows
 
 

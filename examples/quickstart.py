@@ -1,36 +1,45 @@
-"""Quickstart: the paper in 60 seconds.
+"""Quickstart: the paper in 60 seconds, through the engine API.
 
     PYTHONPATH=src python examples/quickstart.py
 
-1. Builds the MultPIM program for N=16/32 and checks Table I/II exactly.
+1. Compiles the MultPIM program for N=16/32 through the engine (build ->
+   optimize -> differential verify -> pack, cached in memory and on
+   disk) and checks Table I/II exactly.
 2. Multiplies a batch of numbers bit-exactly inside the simulated
-   memristive crossbar (every row = an independent multiplier).
-3. Runs the same program through the Pallas TPU kernel (interpret mode).
+   memristive crossbar — integer in, integer out; the engine marshals
+   the bit planes (every row = an independent multiplier).
+3. Runs the same compiled Executable on the JAX-scan and Pallas TPU
+   backends (interpret mode on CPU) without recompiling.
 """
 import numpy as np
 
-from repro.core import (ALGOS, multpim_multiplier, run_numpy)
-from repro.core.bits import from_bits, to_bits
-from repro.core.executor import run_jax
+from repro.core.costmodel import ALGOS
+from repro.engine import get_engine
+
+eng = get_engine()
 
 for n in (16, 32):
-    prog = multpim_multiplier(n)
+    exe = eng.compile(op="multpim", n=n)
+    cost = exe.cost()
     cited = ALGOS["multpim"]["latency"](n)
-    print(f"N={n}: {prog.n_cycles} cycles (Table I: {cited}) "
-          f"{prog.n_memristors} memristors (Table II: "
-          f"{ALGOS['multpim']['area'](n)}), {prog.n_partitions} partitions")
-    assert prog.n_cycles == cited
+    print(f"N={n}: {cost.cycles} cycles (Table I: {cited}) "
+          f"{cost.memristors} memristors (Table II: "
+          f"{ALGOS['multpim']['area'](n)}), {cost.partitions} partitions, "
+          f"{cost.latency_us:.2f} us/pass, verified={exe.verify().ok}")
+    assert cost.cycles == cited
 
 n = 16
-prog = multpim_multiplier(n)
+exe = eng.compile(op="multpim", n=n)
 rng = np.random.default_rng(0)
 a = rng.integers(0, 1 << n, 8)
 b = rng.integers(0, 1 << n, 8)
-out = from_bits(run_numpy(prog, {"a": to_bits(a, n), "b": to_bits(b, n)})["out"])
+out = exe.run({"a": a, "b": b})["out"]          # ints in, exact ints out
 for x, y, p in zip(a, b, out):
     print(f"  {x} * {y} = {int(p)}  {'OK' if int(p) == x * y else 'FAIL'}")
 
-out2 = from_bits(run_jax(prog, {"a": to_bits(a, n), "b": to_bits(b, n)},
-                         use_pallas=True)["out"])
-print("Pallas TPU kernel (interpret):",
-      "bit-identical" if (out2 == out).all() else "MISMATCH")
+for backend in ("jax", "pallas"):
+    alt = exe.run({"a": a, "b": b}, backend=backend)["out"]
+    same = all(int(p) == int(q) for p, q in zip(out, alt))
+    print(f"{backend} backend: {'bit-identical' if same else 'MISMATCH'}")
+
+print("engine cache:", eng.stats())

@@ -9,15 +9,28 @@ Sits between the hand-written program builders (``core/multpim.py``,
 * :mod:`.passes` — dead-INIT elimination, INIT coalescing, cycle
   compaction, cell-lifetime column remapping (:func:`optimize`);
 * :mod:`.verify` — differential bit-exactness proof vs ``run_numpy``;
-* :mod:`.cache` — keyed compile->optimize->verify->pack memoization so
-  each ``(kind, n, flags, pass_config)`` compiles once per process and
-  the executors receive pre-packed, identity-stable tables.
+* :mod:`.spec` — :class:`OpSpec`, the canonical hashable identity of a
+  compiled program (sorted/frozen flags + pass key + content hash);
+* :mod:`.cache` — OpSpec-keyed compile->optimize->verify->pack
+  memoization so each spec compiles once per process and the executors
+  receive pre-packed, identity-stable tables;
+* :mod:`.diskcache` / :mod:`.serialize` — verified entries spill to
+  ``~/.cache/repro`` (``REPRO_CACHE_DIR`` overrides; ``python -m
+  repro.compiler.diskcache clear`` wipes), so cold processes skip
+  build+optimize+verify entirely.
+
+The public device/executable facade over this pipeline is
+:mod:`repro.engine` — new code should compile through an
+:class:`~repro.engine.Engine` rather than calling :func:`compile_cached`
+directly.
 """
 from .cache import (CompiledEntry, ProgramCache, cache_stats, clear_cache,
                     compile_cached, register_builder)
 from .depgraph import DepGraph
+from .diskcache import cache_dir, clear_disk_cache, disk_stats
 from .liveness import dead_sets, live_segments
 from .passes import OptStats, PassConfig, optimize
+from .spec import PIPELINE_VERSION, OpSpec
 from .verify import VerifyReport, verify_equivalence, verify_or_raise
 
 __all__ = [
@@ -26,4 +39,6 @@ __all__ = [
     "verify_equivalence", "verify_or_raise", "VerifyReport",
     "compile_cached", "register_builder", "CompiledEntry", "ProgramCache",
     "cache_stats", "clear_cache",
+    "OpSpec", "PIPELINE_VERSION",
+    "cache_dir", "clear_disk_cache", "disk_stats",
 ]

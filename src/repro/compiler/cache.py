@@ -2,13 +2,19 @@
 
 Hand-written builders re-generate, re-validate and re-pack the same
 static schedule on every call — compile cost paid per request. This
-module makes compilation a once-per-key event: the first request for a
-``(kind, n, flags, pass_config)`` builds the program, runs the pass
+module makes compilation a once-per-key event: the first request for an
+:class:`~repro.compiler.spec.OpSpec` builds the program, runs the pass
 pipeline, differentially verifies the result against the unoptimized
 program, packs the dense executor tables, and memoizes everything; every
 later request returns the exact same :class:`CompiledEntry` (identical
 packed tables, zero rebuild cost). The JAX/Pallas executors therefore
 see stable array identities, which also keeps their jit caches warm.
+
+Keys are :class:`OpSpec` values — canonicalized flags, so permuted or
+differently-constructed flag dicts land on the same entry. Verified
+entries additionally spill to the on-disk cache (:mod:`.diskcache`):
+a cold process that finds a spilled artifact skips build, optimize
+*and* verify (counted in :func:`cache_stats` as ``disk_hits``).
 
 Thread-safe; keys are fully value-based so distinct flag/config combos
 coexist.
@@ -16,17 +22,19 @@ coexist.
 from __future__ import annotations
 
 import threading
-from dataclasses import dataclass, field
-from typing import Callable, Dict, Optional, Tuple
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Union
 
 from repro.core.executor import PackedProgram, pack_program
 from repro.core.program import Program
 
 from .passes import OptStats, PassConfig, optimize
+from .spec import OpSpec
 from .verify import VerifyReport, verify_or_raise
 
 __all__ = ["CompiledEntry", "ProgramCache", "compile_cached",
-           "register_builder", "cache_stats", "clear_cache", "BUILDERS"]
+           "register_builder", "cache_stats", "clear_cache", "BUILDERS",
+           "OpSpec"]
 
 
 def _default_builders() -> Dict[str, Callable[..., Program]]:
@@ -47,62 +55,80 @@ def _default_builders() -> Dict[str, Callable[..., Program]]:
 
 BUILDERS: Dict[str, Callable[..., Program]] = {}
 
+# Kinds whose builder was registered at runtime. Their artifacts never
+# touch the disk cache: the on-disk key hashes only (OpSpec, pipeline
+# version), not builder identity, so a custom builder's spill would
+# poison stock processes sharing the cache dir (and vice versa).
+_CUSTOM_KINDS: set = set()
+
 
 def register_builder(kind: str, builder: Callable[..., Program]) -> None:
     """Expose a new program generator to :func:`compile_cached`.
 
-    Re-registering an existing kind evicts that kind's cached entries,
-    so the next compile uses the new builder."""
+    Re-registering an existing kind evicts that kind's cached entries
+    (memory *and* disk), so the next compile uses the new builder.
+    Custom kinds are memory-cached only (see ``_CUSTOM_KINDS``)."""
     BUILDERS[kind] = builder
+    _CUSTOM_KINDS.add(kind)
     _GLOBAL.evict_kind(kind)
 
 
 @dataclass
 class CompiledEntry:
-    key: Tuple
+    key: OpSpec
     raw: Program                  # as built (reference for verification)
     program: Program              # after the pass pipeline
     packed: PackedProgram         # dense tables for the scan/Pallas path
     stats: OptStats
     verified: Optional[VerifyReport] = None
+    from_disk: bool = False       # loaded pre-verified from the disk cache
+
+    @classmethod
+    def adhoc(cls, prog: Program) -> "CompiledEntry":
+        """Wrap an already-built Program as an uncached, unoptimized
+        entry (legacy shims and per-call-rebuild benchmarks)."""
+        return cls(key=OpSpec(kind=prog.name, n=0), raw=prog, program=prog,
+                   packed=pack_program(prog), stats=OptStats(name=prog.name))
+
+
+def _as_spec(spec_or_kind: Union[OpSpec, str], n: Optional[int],
+             flags, config) -> OpSpec:
+    if isinstance(spec_or_kind, OpSpec):
+        if n is not None or flags is not None or config is not None:
+            raise TypeError("pass either an OpSpec or (kind, n, flags, "
+                            "config), not both")
+        return spec_or_kind
+    if n is None:
+        raise TypeError("n is required when compiling by kind name")
+    return OpSpec.make(spec_or_kind, n, flags, config)
 
 
 class ProgramCache:
-    def __init__(self):
-        self._entries: Dict[Tuple, CompiledEntry] = {}
+    def __init__(self, use_disk: bool = True):
+        self._entries: Dict[OpSpec, CompiledEntry] = {}
         self._lock = threading.Lock()
+        self.use_disk = use_disk
         self.hits = 0
         self.misses = 0
+        self.disk_hits = 0
+        self.compiles = 0             # actual build+optimize events
 
-    def get_or_compile(self, kind: str, n: int, *,
+    def get_or_compile(self, spec_or_kind: Union[OpSpec, str],
+                       n: Optional[int] = None, *,
                        flags: Optional[Dict] = None,
                        config: Optional[PassConfig] = None,
                        verify: bool = True) -> CompiledEntry:
-        cfg = config or PassConfig()
-        fkey = tuple(sorted((flags or {}).items()))
-        key = (kind, n, fkey, cfg.key())
+        spec = _as_spec(spec_or_kind, n, flags, config)
         with self._lock:
-            ent = self._entries.get(key)
+            ent = self._entries.get(spec)
             if ent is not None:
                 self.hits += 1
             else:
                 self.misses += 1
         if ent is None:
-            # Compile outside the lock (it can take a while for large
-            # n); racing compiles of the same key are idempotent —
-            # first to finish wins, others adopt it.
-            if kind not in BUILDERS:
-                for k, v in _default_builders().items():
-                    BUILDERS.setdefault(k, v)
-            if kind not in BUILDERS:
-                raise KeyError(f"unknown program kind '{kind}' "
-                               f"(known: {sorted(BUILDERS)})")
-            raw = BUILDERS[kind](n, **(flags or {}))
-            prog, stats = optimize(raw, cfg)
-            ent = CompiledEntry(key=key, raw=raw, program=prog,
-                                packed=pack_program(prog), stats=stats)
+            ent = self._load_or_compile(spec)
             with self._lock:
-                ent = self._entries.setdefault(key, ent)
+                ent = self._entries.setdefault(spec, ent)
         if verify and ent.verified is None:
             # Verified lazily, once per entry; verify=False requests are
             # happily served by an already-verified entry. A failed
@@ -112,35 +138,77 @@ class ProgramCache:
                 ent.verified = verify_or_raise(ent.raw, ent.program)
             except Exception:
                 with self._lock:
-                    self._entries.pop(key, None)
+                    self._entries.pop(spec, None)
                 raise
+            self._spill(spec, ent)
         return ent
 
+    # ------------------------------------------------------- internals ----
+    def _load_or_compile(self, spec: OpSpec) -> CompiledEntry:
+        # Compile outside the lock (it can take a while for large n);
+        # racing compiles of the same key are idempotent — first to
+        # finish wins, others adopt it.
+        if self.use_disk and spec.kind not in _CUSTOM_KINDS:
+            from .diskcache import load_entry
+            ent = load_entry(spec)
+            if ent is not None:
+                with self._lock:
+                    self.disk_hits += 1
+                return ent
+        if spec.kind not in BUILDERS:
+            for k, v in _default_builders().items():
+                BUILDERS.setdefault(k, v)
+        if spec.kind not in BUILDERS:
+            raise KeyError(f"unknown program kind '{spec.kind}' "
+                           f"(known: {sorted(BUILDERS)})")
+        raw = BUILDERS[spec.kind](spec.n, **spec.flags_dict())
+        prog, stats = optimize(raw, spec.pass_config())
+        with self._lock:
+            self.compiles += 1
+        return CompiledEntry(key=spec, raw=raw, program=prog,
+                             packed=pack_program(prog), stats=stats)
+
+    def _spill(self, spec: OpSpec, ent: CompiledEntry) -> None:
+        if (self.use_disk and not ent.from_disk
+                and spec.kind not in _CUSTOM_KINDS):
+            from .diskcache import store_entry
+            store_entry(spec, ent)
+
+    # -------------------------------------------------------- management ----
     def evict_kind(self, kind: str) -> None:
         with self._lock:
-            for key in [k for k in self._entries if k[0] == kind]:
+            for key in [k for k in self._entries if k.kind == kind]:
                 del self._entries[key]
+        if self.use_disk:
+            from .diskcache import purge_kind
+            purge_kind(kind)
 
     def stats(self) -> Dict[str, int]:
         with self._lock:
             return {"entries": len(self._entries),
-                    "hits": self.hits, "misses": self.misses}
+                    "hits": self.hits, "misses": self.misses,
+                    "disk_hits": self.disk_hits,
+                    "compiles": self.compiles}
 
     def clear(self) -> None:
         with self._lock:
             self._entries.clear()
-            self.hits = self.misses = 0
+            self.hits = self.misses = self.disk_hits = self.compiles = 0
 
 
 _GLOBAL = ProgramCache()
 
 
-def compile_cached(kind: str, n: int, *, flags: Optional[Dict] = None,
+def compile_cached(spec_or_kind: Union[OpSpec, str],
+                   n: Optional[int] = None, *,
+                   flags: Optional[Dict] = None,
                    config: Optional[PassConfig] = None,
                    verify: bool = True) -> CompiledEntry:
-    """Process-wide memoized compile of a named program generator."""
-    return _GLOBAL.get_or_compile(kind, n, flags=flags, config=config,
-                                  verify=verify)
+    """Process-wide memoized compile, by :class:`OpSpec` or by
+    ``(kind, n, flags, config)`` (legacy form — canonicalized into a
+    spec internally, so permuted flag dicts share one entry)."""
+    return _GLOBAL.get_or_compile(spec_or_kind, n, flags=flags,
+                                  config=config, verify=verify)
 
 
 def cache_stats() -> Dict[str, int]:

@@ -52,6 +52,12 @@ class PassConfig:
     def key(self) -> Tuple:
         return (self.dead_init, self.coalesce, self.compact, self.remap)
 
+    @classmethod
+    def from_key(cls, key: Tuple) -> "PassConfig":
+        """Inverse of :meth:`key` (kept adjacent so adding a pass field
+        updates both in one place)."""
+        return cls(*key)
+
 
 @dataclass
 class OptStats:

@@ -55,6 +55,10 @@ class ModelConfig:
     tie_embeddings: bool = True
     norm_eps: float = 1e-6
     source: str = ""
+    # PIM offload: run the LM-head linear under MultPIM fixed-point
+    # semantics via the shared repro.engine ("off" | "pim" | "fake").
+    pim_linear_mode: str = "off"
+    pim_linear_bits: int = 8
 
     @property
     def hd(self) -> int:

@@ -27,8 +27,23 @@ from .multpim import _Unit
 from .program import Layout, Program, ProgramBuilder
 
 __all__ = ["hajali_multiplier", "rime_multiplier",
+           "hajali_multiplier_compiled", "rime_multiplier_compiled",
            "hajali_latency_formula", "hajali_area_formula",
            "rime_latency_formula", "rime_area_formula"]
+
+
+def hajali_multiplier_compiled(n: int) -> Program:
+    """:func:`hajali_multiplier` through the shared engine (optimized,
+    differentially verified, memoized per OpSpec)."""
+    from repro.engine import get_engine   # lazy: avoids import cycle
+    return get_engine().compile("hajali", n).program
+
+
+def rime_multiplier_compiled(n: int) -> Program:
+    """:func:`rime_multiplier` through the shared engine — the compaction
+    pass removes RIME's serial-movement cycles (1043 -> 563 at N=16)."""
+    from repro.engine import get_engine   # lazy: avoids import cycle
+    return get_engine().compile("rime", n).program
 
 
 def hajali_latency_formula(n: int) -> int:

@@ -138,15 +138,15 @@ def run_jax(prog: Program, inputs: Dict[str, np.ndarray], *,
             ) -> Dict[str, np.ndarray]:
     """Execute with JAX. Semantically identical to :func:`run_numpy`.
 
-    ``use_pallas`` routes the per-cycle gate application through the
-    Pallas TPU kernel (interpret mode on CPU). Pass ``packed`` (e.g. a
-    :mod:`repro.compiler.cache` entry's tables) to skip re-packing the
-    schedule. (Each call still traces its own jitted scan; callers
-    wanting amortized compilation should drive
-    :func:`repro.kernels.ops.crossbar_run` with the cached tables.)
+    Deprecation shim over the :mod:`repro.engine.backends` registry
+    (``use_pallas`` selects the Pallas backend, else the jitted-scan JAX
+    backend; both interpret the same packed tables). Pass ``packed``
+    (e.g. a :mod:`repro.compiler.cache` entry's tables) to skip
+    re-packing the schedule. New code should compile an
+    ``Executable`` via :meth:`repro.engine.Engine.compile` and call its
+    ``run`` — that path adds input marshalling and cache-stable tables.
     """
-    import jax
-    import jax.numpy as jnp
+    from repro.engine.backends import resolve_backend
 
     if packed is None:
         packed = pack_program(prog)
@@ -156,42 +156,7 @@ def run_jax(prog: Program, inputs: Dict[str, np.ndarray], *,
     for name, cols in prog.input_map.items():
         state[:, cols] = np.asarray(inputs[name], dtype=np.uint8)
 
-    if use_pallas:
-        from repro.kernels.ops import crossbar_run
-        final = crossbar_run(jnp.asarray(state), packed, interpret=interpret)
-    else:
-        tables = (
-            jnp.asarray(packed.gate_id),
-            jnp.asarray(packed.in_cols),
-            jnp.asarray(packed.out_col),
-            jnp.asarray(packed.init_mask),
-        )
-
-        def step(st, tabs):
-            gid, ics, ocs, imask = tabs
-            st = jnp.where(imask, jnp.uint8(1), st)
-            x0 = st[:, ics[:, 0]].astype(jnp.int32)
-            x1 = st[:, ics[:, 1]].astype(jnp.int32)
-            x2 = st[:, ics[:, 2]].astype(jnp.int32)
-            s3 = x0 + x1 + x2
-            res = jnp.select(
-                [gid == int(Gate.NOT), gid == int(Gate.NOR),
-                 gid == int(Gate.MIN3), gid == int(Gate.NAND),
-                 gid == int(Gate.OR), gid == int(Gate.COPY)],
-                [1 - x0, ((x0 + x1) == 0).astype(jnp.int32),
-                 (s3 <= 1).astype(jnp.int32),
-                 1 - (x0 * x1), ((x0 + x1) >= 1).astype(jnp.int32), x0],
-                default=jnp.int32(1),  # NOP
-            ).astype(jnp.uint8)
-            st = st.at[:, ocs].min(res)  # AND for {0,1}: min == and
-            return st, None
-
-        @jax.jit
-        def run(st):
-            st, _ = jax.lax.scan(step, st, tables)
-            return st
-
-        final = run(jnp.asarray(state))
-
-    final = np.asarray(final)
+    backend = resolve_backend(
+        f"pallas:interpret={str(interpret).lower()}" if use_pallas else "jax")
+    final = np.asarray(backend.run_state(packed, state))
     return {name: final[:, cols].copy() for name, cols in prog.output_map.items()}

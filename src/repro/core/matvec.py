@@ -29,12 +29,10 @@ are reported by the Table III benchmark.
 from __future__ import annotations
 
 import math
-from typing import Dict, List, Tuple
+from typing import List, Tuple
 
 import numpy as np
 
-from .bits import from_bits, to_bits
-from .executor import run_numpy
 from .isa import Gate, Op
 from .multpim import _Unit, broadcast_schedule
 from .program import Layout, Program, ProgramBuilder
@@ -196,76 +194,53 @@ def multpim_mac(n: int) -> Program:
 
 
 # -------------------------------------------------------------------------
-# Host-assisted chaining (the staging micro-steps are charged via
-# STAGING_CYCLES; see module docstring / EXPERIMENTS.md).
+# Host-assisted chaining — DEPRECATION SHIMS. The execution paths below
+# moved into :mod:`repro.engine` (Engine.mac / Engine.inner_product /
+# Engine.matvec run through the shared OpSpec-keyed program cache on a
+# pluggable backend); these wrappers keep the original signatures for
+# existing callers and the tier-1 tests.
 # -------------------------------------------------------------------------
 def mac_run(prog: Program, n: int, a, b, s_i, c_i) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """Execute one MAC on (rows,) integer arrays; returns (lo, s_hi, c_hi)."""
-    a = np.asarray(a, dtype=object)
-    R = a.shape[0]
-    u = np.array([(int(s) >> n) + (int(c) >> n) for s, c in zip(s_i, c_i)],
-                 dtype=object)
-    if any(int(x) >= (1 << n) for x in u):
-        raise OverflowError("u-stream exceeds N bits (accumulator overflow)")
-    c_lo = [int(c) & ((1 << n) - 1) for c in c_i]
-    inputs = {
-        "a": to_bits(a, n),
-        "b": to_bits(b, n),
-        "un": 1 - to_bits(u, n),
-        "s_lo": to_bits([int(s) & ((1 << n) - 1) for s in s_i], n),
-        "c_lo": to_bits(c_lo, n),
-        "c_lo_n": 1 - to_bits(c_lo, n),
-    }
-    out = run_numpy(prog, inputs)
-    lo = from_bits(out["lo"])
-    s_hi = from_bits(out["s_hi"])
-    c_hi = from_bits(out["c_hi"])
-    return lo, s_hi, c_hi
+    """Execute one MAC on (rows,) integer arrays; returns (lo, s_hi, c_hi).
+
+    Deprecated shim: prefer ``repro.engine.get_engine().mac(...)``. The
+    explicitly-passed ``prog`` is honored (it may be a raw, uncompiled
+    build), executed through an engine Executable.
+    """
+    from repro.compiler.cache import CompiledEntry
+    from repro.engine import get_engine
+    from repro.engine.executable import Executable
+    eng = get_engine()
+    exe = Executable(CompiledEntry.adhoc(prog), eng.backend,
+                     crossbar=eng.crossbar, engine=eng)
+    return eng._mac_on(exe, n, a, b, s_i, c_i)
 
 
 def compiled_mac(n: int) -> Program:
-    """The MAC program via the repro.compiler pipeline: built, optimized,
+    """The MAC program via the shared engine: built, optimized,
     differentially verified and memoized once per ``n`` — repeated
     matvec/inner_product calls skip the rebuild entirely."""
-    from repro.compiler.cache import compile_cached   # lazy: no core->compiler import cycle
-    return compile_cached("multpim_mac", n).program
+    from repro.engine import get_engine   # lazy: no core->engine import cycle
+    return get_engine().compile("mac", n).program
 
 
 def inner_product(a_vec, x_vec, n: int, *,
                   use_compiler: bool = True) -> Tuple[np.ndarray, int]:
     """Full-precision fixed-point inner product per crossbar row.
 
-    ``a_vec``/``x_vec``: (rows, n_elems) unsigned ints. Returns
-    (rows,)-int result mod 2^(2n) and the total charged cycle count
-    (MAC cycles measured + staging budget + final 2N-bit recombination).
-    ``use_compiler=False`` rebuilds the raw program per call (the
-    pre-compiler behavior, kept for benchmarking the cache).
+    Deprecated shim for ``repro.engine.Engine.inner_product`` (same
+    signature and numerics; see that method for the contract).
     """
-    a_vec = np.asarray(a_vec, dtype=object)
-    R, E = a_vec.shape
-    prog = compiled_mac(n) if use_compiler else multpim_mac(n)
-    s = np.zeros(R, dtype=object)
-    c = np.zeros(R, dtype=object)
-    cycles = 0
-    for e in range(E):
-        lo, s_hi, c_hi = mac_run(prog, n, a_vec[:, e], x_vec[:, e], s, c)
-        s = np.array([int(l) + (int(sh) << n) for l, sh in zip(lo, s_hi)],
-                     dtype=object)
-        c = np.array([int(ch) << n for ch in c_hi], dtype=object)
-        cycles += prog.n_cycles
-        if e < E - 1:
-            cycles += STAGING_CYCLES(n)
-    # Final recombination s + c with the in-row ripple adder (5*(2N)).
-    cycles += 5 * (2 * n)
-    res = np.array([(int(x) + int(y)) & ((1 << (2 * n)) - 1)
-                    for x, y in zip(s, c)], dtype=object)
-    return res, cycles
+    from repro.engine import get_engine
+    return get_engine().inner_product(a_vec, x_vec, n,
+                                      use_compiler=use_compiler)
 
 
 def matvec(A, x, n: int, *, use_compiler: bool = True) -> Tuple[np.ndarray, int]:
-    """A (m, e) ints, x (e,) ints -> (m,) inner products (each row is an
-    independent crossbar row, exactly the paper's Fig. 5 layout)."""
-    A = np.asarray(A, dtype=object)
-    m, e = A.shape
-    X = np.tile(np.asarray(x, dtype=object)[None, :], (m, 1))
-    return inner_product(A, X, n, use_compiler=use_compiler)
+    """A (m, e) ints, x (e,) ints -> (m,) inner products.
+
+    Deprecated shim for ``repro.engine.Engine.matvec`` (each matrix row
+    is an independent crossbar row, exactly the paper's Fig. 5 layout).
+    """
+    from repro.engine import get_engine
+    return get_engine().matvec(A, x, n, use_compiler=use_compiler)

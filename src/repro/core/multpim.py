@@ -77,11 +77,11 @@ def broadcast_schedule(n: int) -> List[List[Tuple[int, int]]]:
 
 
 def multpim_multiplier_compiled(n: int, skip_last_stages: bool = False) -> Program:
-    """:func:`multpim_multiplier` routed through the repro.compiler
-    pipeline: optimized, differentially verified against the raw build
-    and memoized per ``(n, flags)`` — see :mod:`repro.compiler.cache`."""
-    from repro.compiler.cache import compile_cached   # lazy: avoids import cycle
-    return compile_cached(
+    """:func:`multpim_multiplier` routed through the shared engine:
+    optimized, differentially verified against the raw build and
+    memoized per OpSpec — see :meth:`repro.engine.Engine.compile`."""
+    from repro.engine import get_engine   # lazy: avoids import cycle
+    return get_engine().compile(
         "multpim", n,
         flags={"skip_last_stages": True} if skip_last_stages else None,
     ).program

@@ -1,0 +1,49 @@
+"""repro.engine — one device/executable API over the whole PIM stack.
+
+The paper's pipeline is one flow: build a partitioned schedule, optimize
+it, execute it with row-parallel SIMD (MultPIM Sections IV–VI). This
+package is the single public surface over that flow — an
+:class:`Engine` fronts the schedule builders, the optimizing compiler +
+OpSpec-keyed program cache (memory and disk), the numpy/JAX/Pallas
+executors and the cost model; an :class:`Executable` is one compiled
+program you run many times on a chosen :class:`Backend`.
+
+Quickstart (the 5 lines that replace six modules)::
+
+    from repro.engine import get_engine
+    eng = get_engine()
+    exe = eng.compile(op="multpim", n=16, backend="pallas")
+    print(exe.run({"a": [12345], "b": [321]})["out"])   # [3962745]
+    print(exe.cost().cycles, eng.matvec([[3, 5]], [7, 9], 8)[0])
+
+Everything composes from here: ``eng.compile(op="multpim"|"rime"|
+"hajali"|"mac", n=...)`` returns an ``Executable`` with ``.run(batch)``
+(integer arrays or ``(rows, bits)`` planes — marshalling is automatic),
+``.program``, ``.packed``, ``.cost()`` and ``.verify()``;
+``eng.multiply`` / ``eng.mac`` / ``eng.matvec`` / ``eng.inner_product``
+/ ``eng.linear`` are the high-level ops the examples, benchmarks and
+the PIM-mode serve path all share. Backends are pluggable
+(:func:`register_backend`) and selectable per compile or per run:
+``"numpy"``, ``"jax"``, ``"pallas"`` /
+``"pallas:interpret=false,row_block=512"`` (real TPU).
+
+Legacy entry points (``repro.core.matvec.matvec``,
+``repro.kernels.ops.crossbar_run_cached``,
+``repro.pim.pim_linear_apply``) remain as thin deprecation shims that
+delegate here — new code should talk to the Engine.
+"""
+from .backends import (Backend, JaxBackend, NumpyBackend, PallasBackend,
+                       backend_names, register_backend, resolve_backend)
+from .engine import OP_KINDS, Engine, get_engine
+from .executable import ExecCost, Executable
+
+# Re-exported so callers can build specs/cache keys without touching
+# repro.compiler directly.
+from repro.compiler.spec import OpSpec
+
+__all__ = [
+    "Engine", "get_engine", "OP_KINDS",
+    "Executable", "ExecCost", "OpSpec",
+    "Backend", "NumpyBackend", "JaxBackend", "PallasBackend",
+    "register_backend", "resolve_backend", "backend_names",
+]

@@ -1,0 +1,169 @@
+"""Execution backends: one protocol over numpy / JAX scan / Pallas.
+
+A :class:`Backend` turns a packed program plus an initial crossbar state
+``(rows, C)`` of {0,1} into the final state, bit-identically across
+implementations (the engine test suite asserts parity). All three stock
+backends interpret the *same* dense tables
+(:class:`~repro.core.executor.PackedProgram`), so a compiled
+:class:`~repro.engine.Executable` can hop backends without recompiling.
+
+Stock registry entries:
+
+* ``"numpy"``  — pure-numpy interpreter over the packed tables (the
+  debugging / small-batch reference; no JAX import needed);
+* ``"jax"``    — jitted ``lax.scan`` over the tables
+  (:func:`repro.kernels.ref.crossbar_run_ref`);
+* ``"pallas"`` — the Mosaic TPU kernel
+  (:func:`repro.kernels.crossbar_step.crossbar_run_pallas`);
+  ``interpret=True`` on CPU, ``interpret=False`` on real TPU, with a
+  ``row_block`` row-tiling policy (rows are the SIMD batch axis).
+
+``resolve_backend`` accepts a Backend instance, a registered name, or a
+``"name:key=val,key=val"`` spec string — e.g. ``"pallas:interpret=false,
+row_block=512"`` — so CLI flags map directly onto backend policy.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Protocol, Union, runtime_checkable
+
+import numpy as np
+
+from repro.core.executor import PackedProgram
+from repro.core.isa import Gate
+
+__all__ = ["Backend", "NumpyBackend", "JaxBackend", "PallasBackend",
+           "register_backend", "resolve_backend", "backend_names"]
+
+
+@runtime_checkable
+class Backend(Protocol):
+    """Executes packed programs over batched crossbar state."""
+
+    name: str
+
+    def run_state(self, packed: PackedProgram,
+                  state: np.ndarray) -> np.ndarray:
+        """``state`` (rows, C) {0,1} with C == packed table width; returns
+        the final (rows, C) state after all cycles."""
+        ...
+
+
+# ---------------------------------------------------------------- numpy ----
+@dataclass(frozen=True)
+class NumpyBackend:
+    """Reference interpreter over the packed tables (no JAX import)."""
+
+    name: str = "numpy"
+
+    def run_state(self, packed: PackedProgram, state: np.ndarray) -> np.ndarray:
+        st = np.asarray(state, dtype=np.uint8).copy()
+        gate_id, in_cols, out_col = packed.gate_id, packed.in_cols, packed.out_col
+        for t in range(packed.n_cycles):
+            imask = packed.init_mask[t]
+            if imask.any():
+                st[:, imask] = 1
+                continue
+            # Gather all inputs first (ops within a cycle are simultaneous).
+            gid, ics, ocs = gate_id[t], in_cols[t], out_col[t]
+            x0 = st[:, ics[:, 0]].astype(np.int32)
+            x1 = st[:, ics[:, 1]].astype(np.int32)
+            x2 = st[:, ics[:, 2]].astype(np.int32)
+            s3 = x0 + x1 + x2
+            res = np.select(
+                [gid == int(Gate.NOT), gid == int(Gate.NOR),
+                 gid == int(Gate.MIN3), gid == int(Gate.NAND),
+                 gid == int(Gate.OR), gid == int(Gate.COPY)],
+                [1 - x0, (x0 + x1 == 0).astype(np.int32),
+                 (s3 <= 1).astype(np.int32), 1 - x0 * x1,
+                 (x0 + x1 >= 1).astype(np.int32), x0],
+                default=np.int32(1),
+            ).astype(np.uint8)
+            # AND-write; the validator guarantees distinct real outputs,
+            # duplicates only target the side-effect-free scratch column.
+            np.minimum.at(st, (slice(None), ocs), res)
+        return st
+
+
+# ------------------------------------------------------------------ JAX ----
+@dataclass(frozen=True)
+class JaxBackend:
+    """Jitted ``lax.scan`` over the packed tables."""
+
+    name: str = "jax"
+
+    def run_state(self, packed: PackedProgram, state: np.ndarray) -> np.ndarray:
+        import jax.numpy as jnp
+
+        from repro.kernels.ref import crossbar_run_ref
+        final = crossbar_run_ref(jnp.asarray(state, dtype=jnp.uint8), packed)
+        return np.asarray(final)
+
+
+# --------------------------------------------------------------- Pallas ----
+@dataclass(frozen=True)
+class PallasBackend:
+    """Mosaic TPU kernel; ``interpret=True`` emulates on CPU.
+
+    ``row_block`` is the row-tiling policy: crossbar rows (the SIMD batch
+    axis) are processed in VMEM-resident tiles of this many rows.
+    """
+
+    interpret: bool = True
+    row_block: int = 256
+    name: str = "pallas"
+
+    def run_state(self, packed: PackedProgram, state: np.ndarray) -> np.ndarray:
+        import jax.numpy as jnp
+
+        from repro.kernels.crossbar_step import crossbar_run_pallas
+        final = crossbar_run_pallas(jnp.asarray(state, dtype=jnp.uint8),
+                                    packed, row_block=self.row_block,
+                                    interpret=self.interpret)
+        return np.asarray(final)
+
+
+# -------------------------------------------------------------- registry ----
+_REGISTRY: Dict[str, Callable[..., Backend]] = {
+    "numpy": NumpyBackend,
+    "jax": JaxBackend,
+    "pallas": PallasBackend,
+}
+
+
+def register_backend(name: str, factory: Callable[..., Backend]) -> None:
+    """Add a backend factory (``factory(**options) -> Backend``)."""
+    _REGISTRY[name] = factory
+
+
+def backend_names() -> list:
+    return sorted(_REGISTRY)
+
+
+def _parse_value(v: str):
+    low = v.lower()
+    if low in ("true", "false"):
+        return low == "true"
+    try:
+        return int(v)
+    except ValueError:
+        return v
+
+
+def resolve_backend(spec: Union[None, str, Backend],
+                    default: Optional[Backend] = None) -> Backend:
+    """Backend instance from a name/spec-string/instance (see module doc)."""
+    if spec is None:
+        return default if default is not None else NumpyBackend()
+    if not isinstance(spec, str):
+        return spec
+    name, _, opts = spec.partition(":")
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown backend '{name}' "
+                       f"(registered: {backend_names()})")
+    kwargs = {}
+    if opts:
+        for item in opts.split(","):
+            k, _, v = item.partition("=")
+            kwargs[k.strip()] = _parse_value(v.strip())
+    return _REGISTRY[name](**kwargs)

@@ -1,0 +1,242 @@
+"""Engine: the device facade — compile once, run many, on a chosen backend.
+
+One Engine fronts the whole pipeline: builders -> pass pipeline ->
+differential verify -> packed tables (all via the OpSpec-keyed
+:mod:`repro.compiler.cache`, including its disk spill) -> a
+:class:`~repro.engine.executable.Executable` bound to a
+:class:`~repro.engine.backends.Backend`. High-level ops (``multiply``,
+``mac``, ``inner_product``, ``matvec``, ``linear``) are built on that
+same compile path, so every layer of the stack — examples, benchmarks,
+the PIM-mode serve path — shares one program cache and one backend
+policy.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.core.bits import from_bits, to_bits
+from repro.core.costmodel import CrossbarSpec
+
+from .backends import Backend, resolve_backend
+from .executable import Executable
+
+__all__ = ["Engine", "get_engine", "OP_KINDS"]
+
+# Public op names -> compiler builder kinds.
+OP_KINDS: Dict[str, str] = {
+    "multpim": "multpim",
+    "rime": "rime",
+    "hajali": "hajali",
+    "mac": "multpim_mac",
+    "multpim_mac": "multpim_mac",
+    "multpim_area": "multpim_area",
+}
+
+
+class Engine:
+    """Compile-and-execute front end over the PIM stack.
+
+    ``backend`` is the default execution backend (name, spec string or
+    instance — see :func:`repro.engine.backends.resolve_backend`);
+    ``cache`` defaults to the process-wide program cache so every Engine
+    (and the legacy shim paths) share compiled artifacts; ``crossbar``
+    parameterizes the cost model.
+    """
+
+    def __init__(self, backend: Union[str, Backend] = "numpy", *,
+                 cache: Optional["ProgramCache"] = None,
+                 crossbar: CrossbarSpec = CrossbarSpec(),
+                 pass_config: Optional["PassConfig"] = None):
+        from repro.compiler import cache as _cache_mod
+        self.backend = resolve_backend(backend)
+        self.cache = cache if cache is not None else _cache_mod._GLOBAL
+        self.crossbar = crossbar
+        self.pass_config = pass_config
+        self.runs = 0
+
+    # -------------------------------------------------------- compile ----
+    def compile(self, op: str = "multpim", n: int = 16, *,
+                flags: Optional[Dict] = None,
+                config: Optional["PassConfig"] = None,
+                backend: Union[None, str, Backend] = None,
+                verify: bool = True) -> Executable:
+        """Compile (or fetch) a named op at width ``n`` -> Executable.
+
+        ``op`` is one of ``multpim | rime | hajali | mac | multpim_area``
+        or any kind registered with
+        :func:`repro.compiler.register_builder`.
+        """
+        kind = OP_KINDS.get(op, op)
+        entry = self.cache.get_or_compile(
+            kind, n, flags=flags, config=config or self.pass_config,
+            verify=verify)
+        return Executable(entry, resolve_backend(backend, self.backend),
+                          crossbar=self.crossbar, engine=self)
+
+    def _adhoc(self, op: str, n: int,
+               backend: Union[None, str, Backend] = None) -> Executable:
+        """Uncached raw build (benchmark baseline for the cache win)."""
+        from repro.compiler.cache import (BUILDERS, CompiledEntry,
+                                          _default_builders)
+        kind = OP_KINDS.get(op, op)
+        builders = dict(_default_builders())
+        builders.update(BUILDERS)
+        entry = CompiledEntry.adhoc(builders[kind](n))
+        return Executable(entry, resolve_backend(backend, self.backend),
+                          crossbar=self.crossbar, engine=self)
+
+    def stats(self) -> Dict[str, int]:
+        """Shared program-cache counters plus engine run count."""
+        st = self.cache.stats()
+        st["runs"] = self.runs
+        return st
+
+    # ------------------------------------------------------ high level ----
+    def multiply(self, a, b, n: int, *, op: str = "multpim",
+                 backend: Union[None, str, Backend] = None) -> np.ndarray:
+        """Exact ``a * b mod 2^(2n)`` per row on the simulated crossbar."""
+        exe = self.compile(op, n, backend=backend)
+        return exe.run({"a": np.asarray(a), "b": np.asarray(b)})["out"]
+
+    def mac(self, a, b, s_i, c_i, n: int, *,
+            backend: Union[None, str, Backend] = None
+            ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """One Section-VI fused MAC: ``s_o + c_o = a*b + s_i + c_i`` in
+        carry-save form. Returns ``(lo, s_hi, c_hi)`` integer arrays."""
+        exe = self.compile("mac", n, backend=backend)
+        return self._mac_on(exe, n, a, b, s_i, c_i)
+
+    def _mac_on(self, exe: Executable, n: int, a, b, s_i, c_i
+                ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        a = np.asarray(a, dtype=object)
+        u = np.array([(int(s) >> n) + (int(c) >> n)
+                      for s, c in zip(s_i, c_i)], dtype=object)
+        if any(int(x) >= (1 << n) for x in u):
+            raise OverflowError(
+                "u-stream exceeds N bits (accumulator overflow)")
+        c_lo = [int(c) & ((1 << n) - 1) for c in c_i]
+        out = exe.run({
+            "a": to_bits(a, n),
+            "b": to_bits(b, n),
+            "un": 1 - to_bits(u, n),
+            "s_lo": to_bits([int(s) & ((1 << n) - 1) for s in s_i], n),
+            "c_lo": to_bits(c_lo, n),
+            "c_lo_n": 1 - to_bits(c_lo, n),
+        })
+        return (from_bits(out["lo"]), from_bits(out["s_hi"]),
+                from_bits(out["c_hi"]))
+
+    def inner_product(self, a_vec, x_vec, n: int, *,
+                      use_compiler: bool = True,
+                      backend: Union[None, str, Backend] = None
+                      ) -> Tuple[np.ndarray, int]:
+        """Full-precision fixed-point inner product per crossbar row.
+
+        ``a_vec``/``x_vec``: (rows, n_elems) unsigned ints. Returns
+        (rows,)-int result mod 2^(2n) and the total charged cycle count
+        (MAC cycles measured + staging budget + final recombination).
+        ``use_compiler=False`` rebuilds the raw program per call (the
+        pre-compiler behavior, kept for benchmarking the cache).
+        """
+        from repro.core.matvec import STAGING_CYCLES
+        a_vec = np.asarray(a_vec, dtype=object)
+        R, E = a_vec.shape
+        x_vec = np.asarray(x_vec, dtype=object)
+        exe = (self.compile("mac", n, backend=backend) if use_compiler
+               else self._adhoc("mac", n, backend=backend))
+        s = np.zeros(R, dtype=object)
+        c = np.zeros(R, dtype=object)
+        cycles = 0
+        for e in range(E):
+            lo, s_hi, c_hi = self._mac_on(exe, n, a_vec[:, e], x_vec[:, e],
+                                          s, c)
+            s = np.array([int(l) + (int(sh) << n)
+                          for l, sh in zip(lo, s_hi)], dtype=object)
+            c = np.array([int(ch) << n for ch in c_hi], dtype=object)
+            cycles += exe.n_cycles
+            if e < E - 1:
+                cycles += STAGING_CYCLES(n)
+        # Final recombination s + c with the in-row ripple adder (5*(2N)).
+        cycles += 5 * (2 * n)
+        res = np.array([(int(x) + int(y)) & ((1 << (2 * n)) - 1)
+                        for x, y in zip(s, c)], dtype=object)
+        return res, cycles
+
+    def matvec(self, A, x, n: int, *, use_compiler: bool = True,
+               backend: Union[None, str, Backend] = None
+               ) -> Tuple[np.ndarray, int]:
+        """A (m, e) ints, x (e,) ints -> (m,) inner products (each row is
+        an independent crossbar row, exactly the paper's Fig. 5 layout)."""
+        A = np.asarray(A, dtype=object)
+        m, e = A.shape
+        X = np.tile(np.asarray(x, dtype=object)[None, :], (m, 1))
+        return self.inner_product(A, X, n, use_compiler=use_compiler,
+                                  backend=backend)
+
+    def linear(self, x, w, b=None, *, n_bits: int = 8, mode: str = "pim",
+               use_pallas: bool = False):
+        """A linear layer under MultPIM fixed-point semantics.
+
+        ``mode``: ``float`` (plain matmul) | ``pim`` (quantize, integer
+        matmul bit-identical to the in-memory MultPIM-MAC, dequantize) |
+        ``fake`` (quantize-dequantize straight-through for PIM-aware
+        finetuning). In ``pim`` mode the Section-VI MAC for ``n_bits`` is
+        compiled through this engine's shared cache, so serving traffic
+        pays schedule compilation once per width, and the per-layer cost
+        model rides the same verified program.
+        """
+        import jax.numpy as jnp
+
+        from repro.pim.quant import dequantize, qmatmul_exact, quantize
+        if mode == "float":
+            y = x @ w
+        elif mode == "fake":
+            xq = quantize(x, n_bits)
+            wq = quantize(w, n_bits, axis=0)
+            y = dequantize(xq) @ dequantize(wq)
+        elif mode == "pim":
+            # The schedule actually accounted/executed in-memory: compiled
+            # once per width through the shared cache (hits afterwards).
+            self.compile("mac", n_bits)
+            in_dim = x.shape[-1]
+            lead = x.shape[:-1]
+            x2 = x.reshape(-1, in_dim)
+            xq = quantize(x2, n_bits)
+            wq = quantize(w, n_bits, axis=0)
+            if use_pallas:
+                from repro.kernels.ops import bitserial_matmul
+                prod = bitserial_matmul(xq.q, wq.q.astype(jnp.float32),
+                                        n_bits)
+                k = x2.shape[-1]
+                corr = (xq.zero * jnp.sum(wq.q.astype(jnp.float32), axis=0,
+                                          keepdims=True)
+                        + wq.zero * jnp.sum(xq.q.astype(jnp.float32),
+                                            axis=-1, keepdims=True)
+                        - k * xq.zero * wq.zero)
+                y = (prod - corr) * xq.scale * wq.scale
+            else:
+                y = qmatmul_exact(xq, wq)
+            y = y.reshape(*lead, w.shape[-1])
+        else:
+            raise ValueError(mode)
+        if b is not None:
+            y = y + b
+        return y
+
+
+# ------------------------------------------------------ shared default ----
+_DEFAULT: Optional[Engine] = None
+_DEFAULT_LOCK = threading.Lock()
+
+
+def get_engine() -> Engine:
+    """The process-wide shared Engine (what the serve path and the
+    legacy shims route through)."""
+    global _DEFAULT
+    with _DEFAULT_LOCK:
+        if _DEFAULT is None:
+            _DEFAULT = Engine()
+        return _DEFAULT

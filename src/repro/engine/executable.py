@@ -1,0 +1,167 @@
+"""Executable: a compiled PIM program bound to a backend.
+
+Produced by :meth:`repro.engine.Engine.compile`; owns the verified,
+optimized, packed artifact and knows how to marshal host data in and out
+of the crossbar bit planes. ``run`` accepts either pre-marshalled
+``(rows, n_bits)`` {0,1} bit planes or plain integer arrays — integer
+inputs are converted with :func:`repro.core.bits.to_bits` and, when
+*every* input arrived as integers, outputs come back as exact Python
+ints via :func:`~repro.core.bits.from_bits`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Mapping, Optional, Union
+
+import numpy as np
+
+from repro.core.bits import from_bits, to_bits
+from repro.core.costmodel import CrossbarSpec
+
+from .backends import Backend, resolve_backend
+
+__all__ = ["Executable", "ExecCost"]
+
+
+@dataclass(frozen=True)
+class ExecCost:
+    """Cost-model view of one program invocation (per crossbar pass)."""
+
+    cycles: int
+    memristors: int
+    partitions: int
+    latency_us: float
+    energy_uj: float
+
+    def as_dict(self) -> Dict:
+        return dict(self.__dict__)
+
+
+class Executable:
+    """One compiled program + backend; compile once, ``run`` many."""
+
+    def __init__(self, entry: "CompiledEntry", backend: Backend,
+                 crossbar: CrossbarSpec = CrossbarSpec(),
+                 engine: "Optional[Engine]" = None):
+        self.entry = entry
+        self.backend = backend
+        self.crossbar = crossbar
+        self.engine = engine          # counts runs in Engine.stats()
+
+    # ---------------------------------------------------------- views ----
+    @property
+    def spec(self) -> "OpSpec":
+        return self.entry.key
+
+    @property
+    def program(self) -> "Program":
+        """The optimized :class:`~repro.core.program.Program`."""
+        return self.entry.program
+
+    @property
+    def packed(self) -> "PackedProgram":
+        """Dense executor tables (shared with the jit caches)."""
+        return self.entry.packed
+
+    @property
+    def n_cycles(self) -> int:
+        return self.entry.program.n_cycles
+
+    @property
+    def input_widths(self) -> Dict[str, int]:
+        return {k: len(v) for k, v in self.program.input_map.items()}
+
+    def __repr__(self) -> str:
+        return (f"Executable({self.spec}, backend={self.backend.name}, "
+                f"{self.n_cycles} cycles)")
+
+    # ----------------------------------------------------------- cost ----
+    def cost(self) -> ExecCost:
+        """Cycles/area/latency/energy from the Section V cost model."""
+        prog = self.program
+        gates = sum(len(c.ops) for c in prog.cycles)
+        return ExecCost(
+            cycles=prog.n_cycles,
+            memristors=prog.n_memristors,
+            partitions=prog.n_partitions,
+            latency_us=prog.n_cycles * self.crossbar.cycle_ns / 1e3,
+            energy_uj=gates * self.crossbar.energy_pj_per_gate / 1e6)
+
+    # --------------------------------------------------------- verify ----
+    def verify(self) -> "VerifyReport":
+        """Differential bit-exactness proof vs the unoptimized build.
+
+        Memoized on the cache entry: disk-loaded artifacts carry the
+        report recorded when they were first proven."""
+        if self.entry.verified is None:
+            from repro.compiler.verify import verify_or_raise
+            self.entry.verified = verify_or_raise(self.entry.raw,
+                                                  self.entry.program)
+        return self.entry.verified
+
+    # ------------------------------------------------------------ run ----
+    def _marshal(self, name: str, value) -> "tuple[np.ndarray, bool]":
+        """-> ((rows, n_bits) uint8 planes, was_integer_form)."""
+        width = self.input_widths[name]
+        arr = np.asarray(value)
+        if arr.ndim == 0:
+            arr = arr[None]
+        if arr.ndim == 1:                       # integer form
+            return to_bits(arr, width), True
+        if arr.ndim == 2 and arr.shape[1] == width:
+            bits = np.asarray(arr, dtype=np.uint8)
+            if bits.max(initial=0) > 1:
+                raise ValueError(
+                    f"input '{name}': 2-D input must be {{0,1}} bit planes "
+                    f"(got values > 1); pass a 1-D integer array for "
+                    f"automatic marshalling")
+            return bits, False
+        raise ValueError(
+            f"input '{name}': expected (rows,) integers or "
+            f"(rows, {width}) bit planes, got shape {arr.shape}")
+
+    def run(self, batch: Mapping[str, Union[np.ndarray, list]], *,
+            backend: Union[None, str, Backend] = None
+            ) -> Dict[str, np.ndarray]:
+        """Execute over a batch of crossbar rows.
+
+        ``batch`` maps every program input name to either ``(rows,)``
+        integers or ``(rows, n_bits)`` {0,1} planes. Returns
+        ``{output_name: array}`` — exact object ints when all inputs were
+        integer-form, bit planes otherwise. ``backend`` overrides the
+        bound backend for this call only.
+        """
+        prog = self.program
+        missing = sorted(set(prog.input_map) - set(batch))
+        if missing:
+            raise KeyError(f"missing program inputs {missing} "
+                           f"(required: {sorted(prog.input_map)})")
+        planes: Dict[str, np.ndarray] = {}
+        all_ints = True
+        rows = None
+        for name in prog.input_map:
+            bits, was_int = self._marshal(name, batch[name])
+            all_ints &= was_int
+            if rows is None:
+                rows = bits.shape[0]
+            elif bits.shape[0] != rows:
+                raise ValueError(
+                    f"input '{name}': {bits.shape[0]} rows, but other "
+                    f"inputs have {rows}")
+            planes[name] = bits
+
+        state = np.zeros((rows, self.packed.init_mask.shape[1]),
+                         dtype=np.uint8)
+        for name, cols in prog.input_map.items():
+            state[:, cols] = planes[name]
+
+        bk = resolve_backend(backend, default=self.backend)
+        final = np.asarray(bk.run_state(self.packed, state))
+        if self.engine is not None:
+            self.engine.runs += 1
+
+        out: Dict[str, np.ndarray] = {}
+        for name, cols in prog.output_map.items():
+            bits = final[:, cols].copy()
+            out[name] = from_bits(bits) if all_ints else bits
+        return out

@@ -30,15 +30,18 @@ def crossbar_run_cached(state_bits: jnp.ndarray, kind: str, n: int, *,
                         flags=None, use_pallas: bool = True,
                         interpret: bool = True, row_block: int = 256
                         ) -> jnp.ndarray:
-    """Run a named program from the repro.compiler cache: the schedule is
-    built, optimized, verified and packed once per ``(kind, n, flags)``;
+    """Run a named program through the shared engine's program cache: the
+    schedule is built, optimized, verified and packed once per OpSpec;
     this call only pays the crossbar step itself. ``state_bits`` must be
     ``(rows, packed.init_mask.shape[1])`` — see
-    :func:`repro.compiler.cache.compile_cached` for the entry's layout.
+    :meth:`repro.engine.Engine.compile` for the entry's layout.
+
+    Deprecation shim: prefer ``get_engine().compile(kind, n,
+    backend="pallas").run(...)`` (that path also marshals named inputs).
     """
-    from repro.compiler.cache import compile_cached
-    entry = compile_cached(kind, n, flags=flags)
-    return crossbar_run(state_bits, entry.packed, use_pallas=use_pallas,
+    from repro.engine import get_engine
+    exe = get_engine().compile(kind, n, flags=flags)
+    return crossbar_run(state_bits, exe.packed, use_pallas=use_pallas,
                         interpret=interpret, row_block=row_block)
 
 

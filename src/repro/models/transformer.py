@@ -24,7 +24,24 @@ from .blocks import apply_block, init_block, init_state
 from .layers import Initializer, rms_norm, softcap
 
 __all__ = ["stack_plan", "init_params", "forward", "decode_step",
-           "init_decode_state", "encode"]
+           "init_decode_state", "encode", "head_matmul"]
+
+
+def head_matmul(cfg: ModelConfig, x: jnp.ndarray,
+                head: jnp.ndarray) -> jnp.ndarray:
+    """LM-head projection, optionally offloaded to the PIM engine.
+
+    With ``cfg.pim_linear_mode != "off"`` the projection runs as a
+    PIM-mode linear through the process-shared :mod:`repro.engine` — the
+    Section-VI MAC schedule for ``cfg.pim_linear_bits`` is compiled into
+    the engine's program cache at trace time (once per width) and the
+    matmul itself uses the bit-identical quantized integer path.
+    """
+    if cfg.pim_linear_mode == "off":
+        return x @ head
+    from repro.engine import get_engine   # lazy: models stay engine-free
+    return get_engine().linear(x, head, n_bits=cfg.pim_linear_bits,
+                               mode=cfg.pim_linear_mode)
 
 
 # ------------------------------------------------------------ planning ----
@@ -177,7 +194,7 @@ def forward(cfg: ModelConfig, params, tokens: jnp.ndarray, *,
 
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     head = params.get("lm_head", params["embed"].T)
-    logits = x @ head
+    logits = head_matmul(cfg, x, head)
     logits = softcap(logits, cfg.softcap_final)
     return logits, (new_states if states is not None else None)
 
@@ -255,5 +272,5 @@ def decode_step(cfg: ModelConfig, params, token: jnp.ndarray,
 
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     head = params.get("lm_head", params["embed"].T)
-    logits = softcap(x @ head, cfg.softcap_final)
+    logits = softcap(head_matmul(cfg, x, head), cfg.softcap_final)
     return logits, new_states

@@ -19,11 +19,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Optional
 
-import jax.numpy as jnp
-
 from repro.core.costmodel import CrossbarSpec, GemmCost, gemm_cost
-
-from .quant import QTensor, dequantize, qmatmul_exact, quantize
 
 __all__ = ["PIMLinearSpec", "pim_linear_apply"]
 
@@ -44,34 +40,14 @@ class PIMLinearSpec:
 
 def pim_linear_apply(spec: PIMLinearSpec, x: jnp.ndarray, w: jnp.ndarray,
                      b: Optional[jnp.ndarray] = None) -> jnp.ndarray:
-    """x (..., in_dim) @ w (in_dim, out_dim) under the chosen mode."""
-    if spec.mode == "float":
-        y = x @ w
-    elif spec.mode == "fake":
-        xq = quantize(x, spec.n_bits)
-        wq = quantize(w, spec.n_bits, axis=0)
-        y = dequantize(xq) @ dequantize(wq)
-    elif spec.mode == "pim":
-        lead = x.shape[:-1]
-        x2 = x.reshape(-1, spec.in_dim)
-        xq = quantize(x2, spec.n_bits)
-        wq = quantize(w, spec.n_bits, axis=0)
-        if spec.use_pallas:
-            from repro.kernels.ops import bitserial_matmul
-            prod = bitserial_matmul(xq.q, wq.q.astype(jnp.float32),
-                                    spec.n_bits)
-            k = x2.shape[-1]
-            corr = (xq.zero * jnp.sum(wq.q.astype(jnp.float32), axis=0,
-                                      keepdims=True)
-                    + wq.zero * jnp.sum(xq.q.astype(jnp.float32), axis=-1,
-                                        keepdims=True)
-                    - k * xq.zero * wq.zero)
-            y = (prod - corr) * xq.scale * wq.scale
-        else:
-            y = qmatmul_exact(xq, wq)
-        y = y.reshape(*lead, spec.out_dim)
-    else:
-        raise ValueError(spec.mode)
-    if b is not None:
-        y = y + b
-    return y
+    """x (..., in_dim) @ w (in_dim, out_dim) under the chosen mode.
+
+    Deprecation shim for :meth:`repro.engine.Engine.linear`: every
+    PIM-mode linear in the process (serve path included) runs through
+    the one shared Engine, so the Section-VI MAC schedule for
+    ``spec.n_bits`` compiles exactly once and the cost model rides the
+    same verified program.
+    """
+    from repro.engine import get_engine
+    return get_engine().linear(x, w, b, n_bits=spec.n_bits, mode=spec.mode,
+                               use_pallas=spec.use_pallas)
