@@ -1,0 +1,109 @@
+"""Perf smoke gate: fail CI when cycles-per-MAC (or any tracked cycle
+count) regresses more than 5% against the checked-in baseline.
+
+The metrics are *deterministic compiler outputs* (cycle counts from the
+opt / sim_throughput benchmark paths at small N), not wall-clock, so the
+gate is immune to runner noise while still catching real scheduling or
+co-scheduling regressions.
+
+  PYTHONPATH=src python -m benchmarks.perf_smoke                 # gate
+  PYTHONPATH=src python -m benchmarks.perf_smoke --write-baseline
+
+Baseline lives at ``benchmarks/baseline_pr3.json``; regenerate it (and
+review the diff!) whenever a change legitimately improves or trades off
+these numbers.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__),
+                                "baseline_pr3.json")
+TOLERANCE = 0.05          # >5% regression fails
+
+
+def collect_metrics(n: int = 8, k: int = 4, n_elems: int = 8) -> dict:
+    """Deterministic cycle metrics at small N (fast enough for CI)."""
+    import numpy as np
+
+    from repro.compiler import PassConfig
+    from repro.engine import get_engine
+
+    eng = get_engine()
+    rng = np.random.default_rng(0)
+    A = rng.integers(0, 1 << (n - 2), (4, n_elems))
+    x = rng.integers(0, 1 << (n - 2), n_elems)
+    res_seq, cyc_seq = eng.matvec(A, x, n, k=1)
+    res_k, cyc_k = eng.matvec(A, x, n, k=k)
+    assert [int(a) for a in res_seq] == [int(b) for b in res_k], \
+        "co-scheduled matvec diverged from sequential"
+
+    bex = eng.compile_batch("mac", n, k)
+    listed = eng.compile("multpim", n,
+                         config=PassConfig(scheduler="list")).entry.stats
+    rime_list = eng.compile("rime", n,
+                            config=PassConfig(scheduler="list")).entry.stats
+    rime_fuse = eng.compile(
+        "rime", n, config=PassConfig(fuse=True,
+                                     scheduler="list")).entry.stats
+    return {
+        # lower is better for every metric here
+        f"cycles_per_mac_seq_n{n}": cyc_seq / n_elems,
+        f"cycles_per_mac_k{k}_n{n}": cyc_k / n_elems,
+        f"coschedule_pass_cycles_k{k}_n{n}": bex.n_cycles,
+        f"mac_cycles_n{n}": eng.compile("mac", n).n_cycles,
+        f"multpim_cycles_n{n}": listed.cycles_after,
+        f"multpim_list_cycles_n{n}": listed.list_cycles,
+        f"rime_cycles_n{n}": rime_list.cycles_after,
+        f"rime_fuse_list_cycles_n{n}": rime_fuse.cycles_after,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--write-baseline", action="store_true")
+    ap.add_argument("--tolerance", type=float, default=TOLERANCE)
+    args = ap.parse_args()
+
+    metrics = collect_metrics()
+    for name, val in sorted(metrics.items()):
+        print(f"{name} = {val:.2f}")
+
+    if args.write_baseline:
+        with open(args.baseline, "w") as f:
+            json.dump({k: round(v, 4) for k, v in metrics.items()}, f,
+                      indent=1, sort_keys=True)
+        print(f"wrote baseline {args.baseline}")
+        return
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    failures = []
+    for name, base in sorted(baseline.items()):
+        if name not in metrics:
+            failures.append(f"{name}: metric disappeared "
+                            f"(baseline {base})")
+            continue
+        got = metrics[name]
+        if got > base * (1 + args.tolerance):
+            failures.append(
+                f"{name}: {got:.2f} vs baseline {base:.2f} "
+                f"(+{100 * (got / base - 1):.1f}%, limit "
+                f"+{100 * args.tolerance:.0f}%)")
+    for name in sorted(set(metrics) - set(baseline)):
+        print(f"note: new metric '{name}' not in baseline")
+    if failures:
+        print("PERF SMOKE FAILED:")
+        for f in failures:
+            print("  " + f)
+        sys.exit(1)
+    print(f"perf smoke OK ({len(baseline)} metrics within "
+          f"{100 * args.tolerance:.0f}% of baseline)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,13 +1,21 @@
 """Benchmark harness: one section per paper table + roofline extraction.
 
-Prints ``name,us_per_call,derived`` CSV (the harness contract).
+Prints ``name,us_per_call,derived`` CSV (the harness contract) and, so
+the perf trajectory is tracked across PRs, writes a machine-readable
+JSON (``--json``, default ``BENCH_pr3.json``) mapping each section to
+its rows::
+
+    {"sections": {"table1": [[name, us_per_call, derived], ...], ...},
+     "errors": {"section": "repr(exc)"}}
 
   PYTHONPATH=src python -m benchmarks.run [--section table1|table2|table3|
                                            fa|opt|sim|roofline|all]
+                                          [--json BENCH_pr3.json|off]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 
 
@@ -15,6 +23,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--section", default="all")
     ap.add_argument("--dryrun-json", default="dryrun_results.json")
+    ap.add_argument("--json", default="BENCH_pr3.json",
+                    help="machine-readable output path ('off' disables)")
     args = ap.parse_args()
 
     from . import tables
@@ -33,15 +43,23 @@ def main() -> None:
     }
     names = list(sections) if args.section == "all" else [args.section]
     print("name,us_per_call,derived")
-    bad = 0
+    collected = {}
+    errors = {}
     for name in names:
         try:
-            for row in sections[name]():
+            rows = sections[name]()
+            collected[name] = [[r[0], r[1], r[2]] for r in rows]
+            for row in rows:
                 print(f"{row[0]},{row[1]:.1f},{row[2]}")
         except Exception as e:    # noqa: BLE001
-            bad += 1
+            errors[name] = repr(e)
             print(f"{name},0.0,ERROR={e!r}", file=sys.stderr)
-    sys.exit(1 if bad else 0)
+    if args.json != "off":
+        with open(args.json, "w") as f:
+            json.dump({"sections": collected, "errors": errors}, f, indent=1)
+        print(f"wrote {args.json} ({len(collected)} sections)",
+              file=sys.stderr)
+    sys.exit(1 if errors else 0)
 
 
 if __name__ == "__main__":

@@ -6,8 +6,17 @@ Sits between the hand-written program builders (``core/multpim.py``,
 
 * :mod:`.depgraph` / :mod:`.liveness` — def-use + live-segment analysis
   across cycles under MAGIC read-modify-write semantics;
-* :mod:`.passes` — dead-INIT elimination, INIT coalescing, cycle
-  compaction, cell-lifetime column remapping (:func:`optimize`);
+* :mod:`.passes` — FELIX-style op fusion (opt-in), dead-INIT
+  elimination, INIT coalescing, cycle compaction, cell-lifetime column
+  remapping (:func:`optimize`);
+* :mod:`.schedule` — critical-path list scheduler over the hazard DAG
+  (``PassConfig(scheduler="list")``), never worse than greedy
+  compaction and strictly better on serial-movement schedules;
+* :mod:`.coschedule` — multi-program co-scheduling: a partition-range
+  allocator relocates K independent programs into disjoint partition
+  and column ranges of one wide crossbar and merges their cycle
+  streams, so one backend pass serves K programs
+  (:meth:`repro.engine.Engine.compile_batch`);
 * :mod:`.verify` — differential bit-exactness proof vs ``run_numpy``;
 * :mod:`.spec` — :class:`OpSpec`, the canonical hashable identity of a
   compiled program (sorted/frozen flags + pass key + content hash);
@@ -26,15 +35,21 @@ directly.
 """
 from .cache import (CompiledEntry, ProgramCache, cache_stats, clear_cache,
                     compile_cached, register_builder)
+from .coschedule import (CapacityError, PartitionAllocator, Placement,
+                         coschedule, relocate)
 from .depgraph import DepGraph
 from .diskcache import cache_dir, clear_disk_cache, disk_stats
 from .liveness import dead_sets, live_segments
-from .passes import OptStats, PassConfig, optimize
+from .passes import OptStats, PassConfig, fuse_ops, optimize
+from .schedule import build_op_graph, critical_path, list_schedule
 from .spec import PIPELINE_VERSION, OpSpec
 from .verify import VerifyReport, verify_equivalence, verify_or_raise
 
 __all__ = [
-    "optimize", "PassConfig", "OptStats",
+    "optimize", "PassConfig", "OptStats", "fuse_ops",
+    "list_schedule", "build_op_graph", "critical_path",
+    "coschedule", "relocate", "PartitionAllocator", "Placement",
+    "CapacityError",
     "DepGraph", "live_segments", "dead_sets",
     "verify_equivalence", "verify_or_raise", "VerifyReport",
     "compile_cached", "register_builder", "CompiledEntry", "ProgramCache",

@@ -2,19 +2,35 @@
 
 The pipeline (:func:`optimize`) runs, in order:
 
+0. **op fusion** (opt-in, ``PassConfig.fuse``) — FELIX-style gate-set
+   strength reduction: a NOT whose operand is itself a fresh NOT of a
+   SET-initialized cell collapses to a single-cycle copy (``OR(x, x)``,
+   legal in FELIX's one-cycle OR), and a MIN3 with a provably-SET input
+   narrows to the 2-input NOR it computes. Producer NOTs whose value is
+   then never observed are deleted (general dead-op elimination), which
+   is what removes RIME's per-stage complement relay cycle.
 1. **dead-INIT elimination** — drop SETs whose value is never observed
    before the cell's next SET (or program end); init cycles that empty
    out disappear, shrinking latency, and cells that were *only* ever
    SET stop counting toward area.
 2. **INIT coalescing** — adjacent init cycles merge into one batched SET
    (standard MAGIC accounting: one cycle regardless of cell count).
-3. **cycle compaction** — greedily hoist each op into the earliest
-   preceding compute cycle where (a) no intervening cycle writes the
-   op's inputs or output or reads its output, (b) the destination
-   cycle's engaged partition spans stay pairwise disjoint, and (c) no
-   other op already writes the same column there. Emptied cycles are
-   dropped. This is what reclaims e.g. RIME's trailing serial
-   ``s0 <- 0`` cycle per stage.
+3. **cycle compaction / scheduling** — ``PassConfig.scheduler`` picks
+   the algorithm:
+
+   * ``"greedy"`` (default): greedily hoist each op into the earliest
+     preceding compute cycle where (a) no intervening cycle writes the
+     op's inputs or output or reads its output, (b) the destination
+     cycle's engaged partition spans stay pairwise disjoint, and (c) no
+     other op already writes the same column there. Emptied cycles are
+     dropped. This is what reclaims e.g. RIME's trailing serial
+     ``s0 <- 0`` cycle per stage.
+   * ``"list"``: the critical-path list scheduler (:mod:`.schedule`)
+     reschedules the whole program from scratch over the hazard DAG.
+     The pipeline runs greedy compaction alongside and keeps whichever
+     schedule is shorter, so ``"list"`` is never worse than
+     ``"greedy"`` (``OptStats.list_cycles`` / ``greedy_cycles`` /
+     ``scheduler_used`` record both counts and the winner).
 4. **column remapping** — linear-scan allocation of live segments
    (:mod:`.liveness`) onto same-partition columns whose lifetimes ended,
    then a layout rebuild that drops unused columns. Inputs, outputs and
@@ -26,31 +42,45 @@ are expected to run :mod:`.verify` for end-to-end differential proof.
 """
 from __future__ import annotations
 
+import bisect
 from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Set, Tuple
 
-from repro.core.isa import Op
+from repro.core.isa import Gate, Op
 from repro.core.program import Cycle, Layout, Program
 
-from .depgraph import DepGraph, cycle_reads, cycle_writes, find_seg_index, op_span
+from .depgraph import (EV_SET, DepGraph, cycle_reads, cycle_writes,
+                       find_seg_index, op_span)
 from .liveness import Segment, dead_sets, live_segments
 
-__all__ = ["PassConfig", "OptStats", "optimize",
+__all__ = ["PassConfig", "OptStats", "optimize", "fuse_ops",
            "eliminate_dead_inits", "coalesce_inits", "compact_cycles",
-           "remap_columns"]
+           "remap_columns", "SCHEDULERS"]
+
+SCHEDULERS = ("greedy", "list")
 
 
 @dataclass(frozen=True)
 class PassConfig:
-    """Which passes run. Frozen so configs can key the program cache."""
+    """Which passes run. Frozen so configs can key the program cache.
+
+    ``fuse`` opts into the FELIX-gate-set fusion pass (off by default:
+    it may introduce OR/NOR ops, which would break MultPIM's NOT/MIN3
+    fair-comparison claim if applied blindly). ``scheduler`` picks the
+    compaction algorithm — ``"greedy"`` backward hoist or the
+    ``"list"`` critical-path scheduler (see module docstring).
+    """
 
     dead_init: bool = True
     coalesce: bool = True
     compact: bool = True
     remap: bool = True
+    fuse: bool = False
+    scheduler: str = "greedy"
 
     def key(self) -> Tuple:
-        return (self.dead_init, self.coalesce, self.compact, self.remap)
+        return (self.dead_init, self.coalesce, self.compact, self.remap,
+                self.fuse, self.scheduler)
 
     @classmethod
     def from_key(cls, key: Tuple) -> "PassConfig":
@@ -71,6 +101,11 @@ class OptStats:
     ops_hoisted: int = 0
     cycles_dropped: int = 0
     cols_reused: int = 0
+    ops_fused: int = 0            # fuse pass: rewritten gates
+    ops_deleted: int = 0          # fuse pass: dead producer ops removed
+    list_cycles: int = 0          # scheduler="list": list-scheduled count
+    greedy_cycles: int = 0        # scheduler="list": greedy count alongside
+    scheduler_used: str = ""      # which schedule the pipeline kept
 
     @property
     def cycles_saved(self) -> int:
@@ -95,6 +130,145 @@ def _rebuild(prog: Program, cycles: List[Cycle],
                    input_map=input_map or prog.input_map,
                    output_map=output_map or prog.output_map,
                    name=prog.name)
+
+
+# -------------------------------------------------------- op fusion ----
+def _def_index(prog: Program) -> Dict[int, List[Tuple[int, str, Optional[Op]]]]:
+    """Per-column, time-ordered defs: ``col -> [(t, kind, op)]`` with
+    ``kind`` in ``{"load", "set", "op"}`` (loads at t = -1)."""
+    defs: Dict[int, List[Tuple[int, str, Optional[Op]]]] = {}
+    for cols in prog.input_map.values():
+        for c in cols:
+            defs.setdefault(c, []).append((-1, "load", None))
+    for t, cyc in enumerate(prog.cycles):
+        if cyc.is_init:
+            for c in cyc.init_cells:
+                defs.setdefault(c, []).append((t, "set", None))
+            continue
+        for op in cyc.ops:
+            defs.setdefault(op.out, []).append((t, "op", op))
+    return defs
+
+
+def _last_def_before(defs, col: int, t: int):
+    """Most recent def of ``col`` strictly before cycle ``t`` (ops within
+    a cycle observe pre-cycle state), or None."""
+    lst = defs.get(col)
+    if not lst:
+        return None
+    # (t,) sorts before any (t, kind, op) entry, so this finds the first
+    # def at time >= t without ever comparing the non-time fields (and
+    # without bisect's key= kwarg, which needs Python 3.10+).
+    i = bisect.bisect_left(lst, (t,)) - 1
+    return lst[i] if i >= 0 else None
+
+
+def fuse_ops(prog: Program, stats: OptStats) -> Program:
+    """FELIX-style chain fusion + dead-op cleanup (``PassConfig.fuse``).
+
+    Rewrites (each independently behavior-preserving for *all* inputs,
+    and differentially verified like every pass):
+
+    * **NOT -> NOT**: ``z <- NOT(y)`` where ``y``'s most recent def is
+      ``y <- NOT(x)`` landing on a fresh SET cell (so ``y`` holds exactly
+      ``NOT(x)``) and ``x`` is not redefined in between becomes
+      ``z <- OR(x, x)`` — a single-cycle copy, realizable as FELIX's
+      one-cycle OR with both inputs on the same cell.
+    * **NOT -> MIN3 / MIN3-with-SET**: a MIN3 input whose most recent
+      def is a SET is constantly 1 at read time, and
+      ``Min3(p, q, 1) == NOR(p, q)`` — the op narrows to the 2-input
+      MAGIC NOR, dropping the dependency on the helper SET.
+
+    After rewriting, producer ops whose written value is never observed
+    (no read/RMW/output use before the cell's next SET or program end)
+    are deleted to a fixpoint — this is what actually removes cycles:
+    e.g. RIME's per-stage complement relay (``t2 <- NOT(tmp)`` feeding
+    only ``dst <- NOT(t2)``) collapses into direct copies, emptying the
+    complement cycle and (via dead-INIT) its re-init cycle.
+    """
+    defs = _def_index(prog)
+    lay = prog.layout
+    cycles: List[Cycle] = []
+    for t, cyc in enumerate(prog.cycles):
+        if cyc.is_init:
+            cycles.append(cyc)
+            continue
+        ops: List[Op] = []
+        for op in cyc.ops:
+            new_op = op
+            if op.gate == Gate.NOT:
+                d = _last_def_before(defs, op.ins[0], t)
+                if d is not None and d[1] == "op" and d[2].gate == Gate.NOT:
+                    t1, producer = d[0], d[2]
+                    y_prev = _last_def_before(defs, op.ins[0], t1)
+                    x = producer.ins[0]
+                    x_def = _last_def_before(defs, x, t)
+                    if (y_prev is not None and y_prev[1] == "set"
+                            and (x_def is None or x_def[0] < t1)):
+                        new_op = Op(Gate.OR, (x, x), op.out,
+                                    note=f"{op.note}|fuse:not-not")
+            elif op.gate == Gate.MIN3:
+                fresh = next(
+                    (c for c in op.ins
+                     if (d := _last_def_before(defs, c, t)) is not None
+                     and d[1] == "set"), None)
+                if fresh is not None:
+                    rest = list(op.ins)
+                    rest.remove(fresh)
+                    new_op = Op(Gate.NOR, tuple(rest), op.out,
+                                note=f"{op.note}|fuse:min3-set")
+            if new_op is not op and new_op.gate == Gate.OR:
+                # A NOT->NOT rewrite reads a *different* column, which can
+                # widen the op's engaged span; keep it only if it stays
+                # disjoint from every sibling op's span (siblings are
+                # checked against their current form — MIN3 narrowing only
+                # ever shrinks spans, so it needs no such guard).
+                lo, hi = op_span(lay, new_op)
+                sibs = ops + cyc.ops[len(ops) + 1:]
+                if any(not (hi < a or lo > b)
+                       for a, b in (op_span(lay, o) for o in sibs)):
+                    new_op = op
+            if new_op is not op:
+                stats.ops_fused += 1
+            ops.append(new_op)
+        cycles.append(Cycle(ops=ops, note=cyc.note))
+    cur = _rebuild(prog, cycles)
+
+    # Dead-op elimination to a fixpoint: deleting an op leaves its output
+    # cell holding the previous value, which is unobservable when no use
+    # lands before the next SET (outputs are protected by their EV_OUT
+    # use; an RMW's read of the old value counts as a use).
+    while True:
+        g = DepGraph.build(cur)
+
+        def value_unobserved(col: int, t: int) -> bool:
+            for e in g.col_events(col):
+                if e.t <= t:
+                    continue
+                if e.is_use:
+                    return False
+                if e.kind == EV_SET:
+                    return True
+            return True
+
+        kept: List[Cycle] = []
+        removed = 0
+        for t, cyc in enumerate(cur.cycles):
+            if cyc.is_init:
+                kept.append(cyc)
+                continue
+            ops = [op for op in cyc.ops
+                   if not value_unobserved(op.out, t)]
+            removed += len(cyc.ops) - len(ops)
+            if ops:
+                kept.append(Cycle(ops=ops, note=cyc.note))
+            else:
+                stats.cycles_dropped += 1
+        if not removed:
+            break
+        stats.ops_deleted += removed
+        cur = _rebuild(cur, kept)
+    return cur
 
 
 # ------------------------------------------------------- dead-INIT ----
@@ -263,10 +437,16 @@ def optimize(prog: Program, config: Optional[PassConfig] = None
     bit-exactness proof against the original.
     """
     cfg = config or PassConfig()
+    if cfg.scheduler not in SCHEDULERS:
+        raise ValueError(f"unknown scheduler '{cfg.scheduler}' "
+                         f"(known: {SCHEDULERS})")
     stats = OptStats(name=prog.name,
                      cycles_before=prog.n_cycles,
                      cols_before=prog.n_memristors)
     cur = prog
+    if cfg.fuse:
+        cur = fuse_ops(cur, stats)
+        cur.validate()
     if cfg.dead_init:
         cur = eliminate_dead_inits(cur, stats)
         cur.validate()
@@ -274,8 +454,28 @@ def optimize(prog: Program, config: Optional[PassConfig] = None
         cur = coalesce_inits(cur, stats)
         cur.validate()
     if cfg.compact:
-        cur = compact_cycles(cur, stats)
-        cur.validate()
+        if cfg.scheduler == "list":
+            from .schedule import list_schedule
+            listed = list_schedule(cur)
+            listed.validate()
+            greedy_stats = OptStats()
+            greedy = compact_cycles(cur, greedy_stats)
+            greedy.validate()
+            stats.list_cycles = listed.n_cycles
+            stats.greedy_cycles = greedy.n_cycles
+            # Never worse than greedy: keep the shorter schedule.
+            if listed.n_cycles <= greedy.n_cycles:
+                stats.scheduler_used = "list"
+                cur = listed
+            else:
+                stats.scheduler_used = "greedy"
+                stats.ops_hoisted = greedy_stats.ops_hoisted
+                stats.cycles_dropped += greedy_stats.cycles_dropped
+                cur = greedy
+        else:
+            stats.scheduler_used = "greedy"
+            cur = compact_cycles(cur, stats)
+            cur.validate()
     if cfg.remap:
         cur = remap_columns(cur, stats)
         cur.validate()

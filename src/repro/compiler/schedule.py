@@ -1,0 +1,193 @@
+"""Priority list scheduler over the Program dep graph.
+
+``compact_cycles`` (:mod:`.passes`) is a greedy *backward hoist*: it
+keeps the original cycle skeleton and pulls individual ops earlier one
+at a time, with conservative crossing windows. That reclaims serial
+tails (RIME's ``s0 <- 0``) but cannot re-derive a genuinely different
+cycle structure — e.g. the ragged broadcast trees that non-power-of-two
+N produce, where the best packing interleaves ops from *different*
+original cycles. This module reschedules the whole program from scratch:
+
+1. **Op graph** (:func:`build_op_graph`): one node per compute op and one
+   per INIT'd cell (splitting batched SETs lets the scheduler re-batch
+   them freely). Edges are the per-column hazards — RAW (def -> use),
+   WAR (use -> next def) and WAW (def -> def). Every edge forces a
+   strictly later cycle: under the memristive-partition model two ops
+   sharing *any* column both electrically engage that column's
+   partition, so their spans overlap and they can never share a cycle —
+   there is no exploitable same-cycle WAR slack to model.
+
+2. **Priorities** (:func:`critical_path`): classic critical-path length,
+   the longest hazard-path from a node to any sink. Ops on the critical
+   path are placed first; off-path ops fill remaining span-disjoint
+   slots of the same cycle.
+
+3. **List scheduling** (:func:`list_schedule`): cycles are emitted in
+   order. Each cycle takes the ready set (all hazard predecessors
+   scheduled in earlier cycles) and packs it by descending priority
+   subject to the ISA's per-cycle legality — engaged partition spans
+   pairwise disjoint (which also implies one gate per merged span and
+   one write per column). If the highest-priority ready node is a SET,
+   the cycle becomes a batched INIT of *every* ready SET (standard MAGIC
+   accounting: one cycle regardless of cell count), re-coalescing inits
+   maximally.
+
+The result preserves program semantics by construction (hazard edges
+are exactly the executor's visibility rules) and is differentially
+verified against the unoptimized build like every other pass — see
+:func:`repro.compiler.verify.verify_equivalence`. The pipeline
+(:func:`repro.compiler.passes.optimize` with
+``PassConfig(scheduler="list")``) additionally never returns a schedule
+longer than greedy compaction's: it runs both and keeps the shorter
+(:data:`~repro.compiler.passes.OptStats.scheduler_used` records which
+won).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.core.isa import Op
+from repro.core.program import Cycle, Program
+
+from .depgraph import op_span
+
+__all__ = ["ScheduleNode", "build_op_graph", "critical_path",
+           "list_schedule"]
+
+
+@dataclass
+class ScheduleNode:
+    """One schedulable unit: a compute op, or a single cell's SET."""
+
+    idx: int
+    orig_t: int                 # original cycle (stable tie-break)
+    op: Optional[Op] = None     # compute node when set
+    set_col: int = -1           # INIT node when >= 0
+
+    @property
+    def is_set(self) -> bool:
+        return self.op is None
+
+
+def build_op_graph(prog: Program
+                   ) -> Tuple[List[ScheduleNode], List[Set[int]]]:
+    """-> ``(nodes, succs)``: hazard DAG over ops and per-cell SETs.
+
+    ``succs[i]`` holds successor node indices; every edge means "at
+    least one cycle later". Edges always point from a lower to a higher
+    node index (nodes are created in program order), so index order is a
+    topological order.
+    """
+    nodes: List[ScheduleNode] = []
+    succs: List[Set[int]] = []
+
+    def new_node(**kw) -> ScheduleNode:
+        n = ScheduleNode(idx=len(nodes), **kw)
+        nodes.append(n)
+        succs.append(set())
+        return n
+
+    last_def: Dict[int, int] = {}        # col -> defining node idx
+    readers: Dict[int, List[int]] = {}   # col -> reads since last def
+
+    def define(col: int, d: int) -> None:
+        prev = last_def.get(col)
+        if prev is not None and prev != d:          # WAW
+            succs[prev].add(d)
+        for r in readers.get(col, ()):              # WAR
+            if r != d:
+                succs[r].add(d)
+        last_def[col] = d
+        readers[col] = []
+
+    for t, cyc in enumerate(prog.cycles):
+        if cyc.is_init:
+            for c in cyc.init_cells:
+                define(c, new_node(orig_t=t, set_col=c).idx)
+            continue
+        cyc_nodes = [new_node(orig_t=t, op=op) for op in cyc.ops]
+        # All reads first: ops within a cycle observe pre-cycle state.
+        # The RMW output is a read of its own old value too.
+        for u in cyc_nodes:
+            for c in set(u.op.ins) | {u.op.out}:
+                d = last_def.get(c)
+                if d is not None:                   # RAW
+                    succs[d].add(u.idx)
+                readers.setdefault(c, []).append(u.idx)
+        for u in cyc_nodes:
+            define(u.op.out, u.idx)
+    return nodes, succs
+
+
+def critical_path(succs: List[Set[int]]) -> List[int]:
+    """Longest hazard-path length from each node to any sink (edges are
+    unit weight). Computed in reverse index order — a topological order
+    by construction of :func:`build_op_graph`."""
+    prio = [0] * len(succs)
+    for i in range(len(succs) - 1, -1, -1):
+        if succs[i]:
+            prio[i] = 1 + max(prio[j] for j in succs[i])
+    return prio
+
+
+def list_schedule(prog: Program) -> Program:
+    """Reschedule ``prog`` from scratch (see module docstring).
+
+    Returns a new :class:`Program` over the same layout and I/O maps;
+    the caller is expected to validate and differentially verify it.
+    """
+    nodes, succs = build_op_graph(prog)
+    n_nodes = len(nodes)
+    prio = critical_path(succs)
+    npred = [0] * n_nodes
+    for i in range(n_nodes):
+        for j in succs[i]:
+            npred[j] += 1
+    est = [0] * n_nodes                     # earliest legal cycle
+    released = {i for i in range(n_nodes) if npred[i] == 0}
+    lay = prog.layout
+
+    def order(i: int) -> Tuple[int, int, int]:
+        return (-prio[i], nodes[i].orig_t, i)
+
+    cycles: List[Cycle] = []
+    t = 0
+    scheduled = 0
+    while scheduled < n_nodes:
+        cand = [i for i in released if est[i] <= t]
+        if not cand:
+            t = min(est[i] for i in released)
+            cand = [i for i in released if est[i] <= t]
+        op_cand = [i for i in cand if not nodes[i].is_set]
+        set_cand = [i for i in cand if nodes[i].is_set]
+        placed: List[int] = []
+        if op_cand and (not set_cand
+                        or max(prio[i] for i in op_cand)
+                        >= max(prio[i] for i in set_cand)):
+            spans: List[Tuple[int, int]] = []
+            for i in sorted(op_cand, key=order):
+                lo, hi = op_span(lay, nodes[i].op)
+                if all(hi < a or lo > b for a, b in spans):
+                    spans.append((lo, hi))
+                    placed.append(i)
+            cycles.append(Cycle(ops=[nodes[i].op for i in placed],
+                                note="ls"))
+        else:
+            placed = set_cand
+            cycles.append(Cycle(
+                init_cells=sorted(nodes[i].set_col for i in placed),
+                note="ls:init"))
+        for i in placed:
+            released.discard(i)
+            scheduled += 1
+            for j in succs[i]:
+                npred[j] -= 1
+                if est[j] < t + 1:
+                    est[j] = t + 1
+                if npred[j] == 0:
+                    released.add(j)
+        t += 1
+    return Program(layout=lay, cycles=cycles,
+                   input_map=prog.input_map, output_map=prog.output_map,
+                   name=prog.name)

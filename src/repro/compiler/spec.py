@@ -32,7 +32,8 @@ __all__ = ["OpSpec", "PIPELINE_VERSION", "freeze_flags"]
 
 # Version of the whole compile pipeline (builders + passes + packer).
 # Bump whenever a change makes previously-spilled disk artifacts stale.
-PIPELINE_VERSION = "2"
+# "3": PassConfig gained fuse/scheduler fields (pass_key shape changed).
+PIPELINE_VERSION = "3"
 
 
 def _freeze(value: Any) -> Any:
@@ -86,7 +87,7 @@ class OpSpec:
     kind: str
     n: int
     flags: Tuple[Tuple[str, Any], ...] = ()
-    pass_key: Tuple[bool, ...] = field(
+    pass_key: Tuple[Any, ...] = field(
         default_factory=lambda: tuple(PassConfig().key()))
 
     @classmethod

@@ -224,23 +224,26 @@ def compiled_mac(n: int) -> Program:
     return get_engine().compile("mac", n).program
 
 
-def inner_product(a_vec, x_vec, n: int, *,
-                  use_compiler: bool = True) -> Tuple[np.ndarray, int]:
+def inner_product(a_vec, x_vec, n: int, *, use_compiler: bool = True,
+                  k=None) -> Tuple[np.ndarray, int]:
     """Full-precision fixed-point inner product per crossbar row.
 
     Deprecated shim for ``repro.engine.Engine.inner_product`` (same
-    signature and numerics; see that method for the contract).
+    signature and numerics; see that method for the contract — ``k``
+    is the co-scheduled MAC group size, default engine policy).
     """
     from repro.engine import get_engine
     return get_engine().inner_product(a_vec, x_vec, n,
-                                      use_compiler=use_compiler)
+                                      use_compiler=use_compiler, k=k)
 
 
-def matvec(A, x, n: int, *, use_compiler: bool = True) -> Tuple[np.ndarray, int]:
+def matvec(A, x, n: int, *, use_compiler: bool = True,
+           k=None) -> Tuple[np.ndarray, int]:
     """A (m, e) ints, x (e,) ints -> (m,) inner products.
 
     Deprecated shim for ``repro.engine.Engine.matvec`` (each matrix row
-    is an independent crossbar row, exactly the paper's Fig. 5 layout).
+    is an independent crossbar row, exactly the paper's Fig. 5 layout;
+    ``k`` co-schedules the MAC stream — see ``Engine.inner_product``).
     """
     from repro.engine import get_engine
-    return get_engine().matvec(A, x, n, use_compiler=use_compiler)
+    return get_engine().matvec(A, x, n, use_compiler=use_compiler, k=k)

@@ -20,6 +20,11 @@ Everything composes from here: ``eng.compile(op="multpim"|"rime"|
 "hajali"|"mac", n=...)`` returns an ``Executable`` with ``.run(batch)``
 (integer arrays or ``(rows, bits)`` planes — marshalling is automatic),
 ``.program``, ``.packed``, ``.cost()`` and ``.verify()``;
+``eng.compile_batch(op, n, k)`` co-schedules K copies into disjoint
+partition/column ranges of one crossbar and returns a
+:class:`BatchedExecutable` whose single pass serves K operand sets
+(``cost().cycles_per_program`` is the cycles-per-MAC the throughput
+benchmarks track);
 ``eng.multiply`` / ``eng.mac`` / ``eng.matvec`` / ``eng.inner_product``
 / ``eng.linear`` are the high-level ops the examples, benchmarks and
 the PIM-mode serve path all share. Backends are pluggable
@@ -33,17 +38,19 @@ Legacy entry points (``repro.core.matvec.matvec``,
 delegate here — new code should talk to the Engine.
 """
 from .backends import (Backend, JaxBackend, NumpyBackend, PallasBackend,
-                       backend_names, register_backend, resolve_backend)
-from .engine import OP_KINDS, Engine, get_engine
-from .executable import ExecCost, Executable
+                       autotune_row_block, backend_names, register_backend,
+                       resolve_backend)
+from .engine import DEFAULT_COSCHEDULE_K, OP_KINDS, Engine, get_engine
+from .executable import BatchedExecutable, ExecCost, Executable
 
 # Re-exported so callers can build specs/cache keys without touching
 # repro.compiler directly.
 from repro.compiler.spec import OpSpec
 
 __all__ = [
-    "Engine", "get_engine", "OP_KINDS",
-    "Executable", "ExecCost", "OpSpec",
+    "Engine", "get_engine", "OP_KINDS", "DEFAULT_COSCHEDULE_K",
+    "Executable", "BatchedExecutable", "ExecCost", "OpSpec",
     "Backend", "NumpyBackend", "JaxBackend", "PallasBackend",
     "register_backend", "resolve_backend", "backend_names",
+    "autotune_row_block",
 ]

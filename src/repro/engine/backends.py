@@ -33,7 +33,8 @@ from repro.core.executor import PackedProgram
 from repro.core.isa import Gate
 
 __all__ = ["Backend", "NumpyBackend", "JaxBackend", "PallasBackend",
-           "register_backend", "resolve_backend", "backend_names"]
+           "register_backend", "resolve_backend", "backend_names",
+           "autotune_row_block", "DEFAULT_ROW_BLOCK", "MAX_ROW_BLOCK"]
 
 
 @runtime_checkable
@@ -101,16 +102,36 @@ class JaxBackend:
 
 
 # --------------------------------------------------------------- Pallas ----
+DEFAULT_ROW_BLOCK = 256
+MAX_ROW_BLOCK = 512
+
+
+def autotune_row_block(rows: int, max_block: int = MAX_ROW_BLOCK) -> int:
+    """Row-tiling policy from the batch shape: the smallest power of two
+    covering ``rows`` (so a small batch is one tile with minimal padding),
+    clamped to [8, ``max_block``] — 8 is the f32 sublane tile, 512 keeps
+    the state tile comfortably inside VMEM for the widest programs."""
+    b = 8
+    while b < rows and b < max_block:
+        b <<= 1
+    return b
+
+
 @dataclass(frozen=True)
 class PallasBackend:
     """Mosaic TPU kernel; ``interpret=True`` emulates on CPU.
 
     ``row_block`` is the row-tiling policy: crossbar rows (the SIMD batch
     axis) are processed in VMEM-resident tiles of this many rows.
+    ``None`` (the default) means *autotune*: the engine picks a block
+    from the batch shape at the Executable's first ``run`` (see
+    :func:`autotune_row_block`) and caches the choice on the Engine;
+    an explicit value (e.g. ``"pallas:row_block=512"``) is always
+    honored.
     """
 
     interpret: bool = True
-    row_block: int = 256
+    row_block: Optional[int] = None
     name: str = "pallas"
 
     def run_state(self, packed: PackedProgram, state: np.ndarray) -> np.ndarray:
@@ -118,7 +139,9 @@ class PallasBackend:
 
         from repro.kernels.crossbar_step import crossbar_run_pallas
         final = crossbar_run_pallas(jnp.asarray(state, dtype=jnp.uint8),
-                                    packed, row_block=self.row_block,
+                                    packed,
+                                    row_block=self.row_block
+                                    or DEFAULT_ROW_BLOCK,
                                     interpret=self.interpret)
         return np.asarray(final)
 

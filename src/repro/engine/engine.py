@@ -9,9 +9,20 @@ differential verify -> packed tables (all via the OpSpec-keyed
 same compile path, so every layer of the stack — examples, benchmarks,
 the PIM-mode serve path — shares one program cache and one backend
 policy.
+
+:meth:`Engine.compile_batch` is the multi-program co-scheduling entry:
+K copies of one verified program are relocated into disjoint
+partition/column ranges of a single wide crossbar
+(:mod:`repro.compiler.coschedule`) and fused into one
+:class:`~repro.engine.executable.BatchedExecutable`, so one backend
+pass serves K MACs. ``inner_product``/``matvec`` split their element
+streams into ``k`` independent carry-save accumulator chains and issue
+co-scheduled MAC groups instead of sequential passes (about K-fold
+fewer crossbar passes and K-fold lower cycles-per-MAC).
 """
 from __future__ import annotations
 
+import math
 import threading
 from typing import Dict, Optional, Tuple, Union
 
@@ -21,9 +32,14 @@ from repro.core.bits import from_bits, to_bits
 from repro.core.costmodel import CrossbarSpec
 
 from .backends import Backend, resolve_backend
-from .executable import Executable
+from .executable import BatchedExecutable, Executable
 
-__all__ = ["Engine", "get_engine", "OP_KINDS"]
+__all__ = ["Engine", "get_engine", "OP_KINDS", "DEFAULT_COSCHEDULE_K"]
+
+# Default co-scheduled MAC group size: 4 MACs per crossbar pass keeps
+# the fused 8/16-bit MAC layouts comfortably inside a 1024-column
+# crossbar while already cutting cycles-per-MAC ~4x.
+DEFAULT_COSCHEDULE_K = 4
 
 # Public op names -> compiler builder kinds.
 OP_KINDS: Dict[str, str] = {
@@ -49,13 +65,18 @@ class Engine:
     def __init__(self, backend: Union[str, Backend] = "numpy", *,
                  cache: Optional["ProgramCache"] = None,
                  crossbar: CrossbarSpec = CrossbarSpec(),
-                 pass_config: Optional["PassConfig"] = None):
+                 pass_config: Optional["PassConfig"] = None,
+                 coschedule_k: int = DEFAULT_COSCHEDULE_K):
         from repro.compiler import cache as _cache_mod
         self.backend = resolve_backend(backend)
         self.cache = cache if cache is not None else _cache_mod._GLOBAL
         self.crossbar = crossbar
         self.pass_config = pass_config
+        self.coschedule_k = coschedule_k
+        self.tuned_row_block: Optional[int] = None  # Pallas autotune cache
         self.runs = 0
+        self._batch_entries: Dict[Tuple, Tuple] = {}
+        self._batch_lock = threading.Lock()
 
     # -------------------------------------------------------- compile ----
     def compile(self, op: str = "multpim", n: int = 16, *,
@@ -75,6 +96,87 @@ class Engine:
             verify=verify)
         return Executable(entry, resolve_backend(backend, self.backend),
                           crossbar=self.crossbar, engine=self)
+
+    def compile_batch(self, op: str = "mac", n: int = 16, k: int = 4, *,
+                      flags: Optional[Dict] = None,
+                      config: Optional["PassConfig"] = None,
+                      backend: Union[None, str, Backend] = None,
+                      verify: bool = True) -> BatchedExecutable:
+        """Co-schedule ``k`` copies of one op into a single crossbar pass.
+
+        The single program compiles (and differentially verifies)
+        through the shared cache exactly like :meth:`compile`; the fused
+        artifact — ``k`` relocated copies in disjoint partition/column
+        ranges with merged cycle streams — is memoized per
+        ``(OpSpec, k)`` on this Engine, so repeated traffic reuses one
+        packed table. The crossbar's physical column budget
+        (``self.crossbar.cols``) bounds ``k``; an oversized request
+        raises :class:`repro.compiler.coschedule.CapacityError`.
+        """
+        if k < 1:
+            raise ValueError("k >= 1")
+        kind = OP_KINDS.get(op, op)
+        entry = self.cache.get_or_compile(
+            kind, n, flags=flags, config=config or self.pass_config,
+            verify=verify)
+        key = (entry.key, int(k))
+        with self._batch_lock:
+            memo = self._batch_entries.get(key)
+            # The memo is valid only while it was fused from *this* base
+            # entry — clear_cache()/register_builder() can recompile an
+            # equal OpSpec into a new entry, and a fused program built
+            # from the old one must not survive that.
+            if memo is not None and memo[0] is not entry:
+                memo = None
+        if memo is None:
+            from repro.compiler.cache import CompiledEntry
+            from repro.compiler.coschedule import (PartitionAllocator,
+                                                   coschedule)
+            alloc = PartitionAllocator(max_cols=self.crossbar.cols)
+            prog, placements = coschedule(
+                [entry.program] * k, allocator=alloc,
+                name=f"coschedule{k}[{entry.program.name}]")
+            memo = (entry, CompiledEntry.adhoc(prog), placements)
+            with self._batch_lock:
+                prev = self._batch_entries.get(key)
+                if prev is not None and prev[0] is entry:
+                    memo = prev           # racing fuse: first one wins
+                else:
+                    self._batch_entries[key] = memo
+        _, fused_entry, placements = memo
+        inner = Executable(fused_entry, resolve_backend(backend,
+                                                        self.backend),
+                           crossbar=self.crossbar, engine=self)
+        return BatchedExecutable(inner, k, placements, entry)
+
+    def max_coschedule_k(self, op: str = "mac", n: int = 16, *,
+                         flags: Optional[Dict] = None,
+                         config: Optional["PassConfig"] = None) -> int:
+        """Largest K the physical crossbar (``self.crossbar.cols``
+        columns) can co-schedule for this op/width — 0 when even a
+        single copy exceeds the crossbar (callers must then fall back
+        to the plain, non-co-scheduled compile)."""
+        from repro.compiler.coschedule import PartitionAllocator
+        kind = OP_KINDS.get(op, op)
+        entry = self.cache.get_or_compile(
+            kind, n, flags=flags, config=config or self.pass_config)
+        alloc = PartitionAllocator(max_cols=self.crossbar.cols)
+        return alloc.capacity(entry.program)
+
+    def effective_coschedule_k(self, op: str = "mac", n: int = 16,
+                               requested: Optional[int] = None, *,
+                               flags: Optional[Dict] = None,
+                               config: Optional["PassConfig"] = None) -> int:
+        """The one K-clamp policy every co-scheduling consumer shares:
+        the requested group size (default: this engine's
+        ``coschedule_k``) bounded by the crossbar's capacity for this
+        op/width — measured on the *same* flags/config the caller will
+        compile with, since the pass config changes program width.
+        Returns 0 when even one copy doesn't fit — callers treat < 2 as
+        "co-scheduling off, use the plain compile"."""
+        want = self.coschedule_k if requested is None else int(requested)
+        return min(want, self.max_coschedule_k(op, n, flags=flags,
+                                               config=config))
 
     def _adhoc(self, op: str, n: int,
                backend: Union[None, str, Backend] = None) -> Executable:
@@ -109,8 +211,9 @@ class Engine:
         exe = self.compile("mac", n, backend=backend)
         return self._mac_on(exe, n, a, b, s_i, c_i)
 
-    def _mac_on(self, exe: Executable, n: int, a, b, s_i, c_i
-                ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    def _mac_inputs(self, n: int, a, b, s_i, c_i) -> Dict[str, np.ndarray]:
+        """Marshal one MAC's integer operands into the program's bit
+        planes (sum/carry latch pre-loads + complemented u-stream)."""
         a = np.asarray(a, dtype=object)
         u = np.array([(int(s) >> n) + (int(c) >> n)
                       for s, c in zip(s_i, c_i)], dtype=object)
@@ -118,63 +221,127 @@ class Engine:
             raise OverflowError(
                 "u-stream exceeds N bits (accumulator overflow)")
         c_lo = [int(c) & ((1 << n) - 1) for c in c_i]
-        out = exe.run({
+        return {
             "a": to_bits(a, n),
             "b": to_bits(b, n),
             "un": 1 - to_bits(u, n),
             "s_lo": to_bits([int(s) & ((1 << n) - 1) for s in s_i], n),
             "c_lo": to_bits(c_lo, n),
             "c_lo_n": 1 - to_bits(c_lo, n),
-        })
+        }
+
+    @staticmethod
+    def _mac_accumulate(n: int, out: Dict[str, np.ndarray]
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+        """MAC outputs -> next (s, c) carry-save accumulator state."""
+        lo, s_hi, c_hi = (from_bits(out["lo"]), from_bits(out["s_hi"]),
+                          from_bits(out["c_hi"]))
+        s = np.array([int(l) + (int(sh) << n)
+                      for l, sh in zip(lo, s_hi)], dtype=object)
+        c = np.array([int(ch) << n for ch in c_hi], dtype=object)
+        return s, c
+
+    def _mac_on(self, exe: Executable, n: int, a, b, s_i, c_i
+                ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        out = exe.run(self._mac_inputs(n, a, b, s_i, c_i))
         return (from_bits(out["lo"]), from_bits(out["s_hi"]),
                 from_bits(out["c_hi"]))
 
     def inner_product(self, a_vec, x_vec, n: int, *,
                       use_compiler: bool = True,
-                      backend: Union[None, str, Backend] = None
+                      backend: Union[None, str, Backend] = None,
+                      k: Optional[int] = None
                       ) -> Tuple[np.ndarray, int]:
         """Full-precision fixed-point inner product per crossbar row.
 
         ``a_vec``/``x_vec``: (rows, n_elems) unsigned ints. Returns
         (rows,)-int result mod 2^(2n) and the total charged cycle count
         (MAC cycles measured + staging budget + final recombination).
-        ``use_compiler=False`` rebuilds the raw program per call (the
-        pre-compiler behavior, kept for benchmarking the cache).
+
+        ``k`` is the co-scheduled MAC group size: the element stream is
+        split into ``k`` *independent* carry-save accumulator chains
+        (chain ``j`` takes elements ``j, j+k, ...``) whose per-pass MACs
+        are co-scheduled into one crossbar via :meth:`compile_batch` —
+        ``ceil(E/k)`` crossbar passes instead of ``E``. Default
+        (``None``): ``min(coschedule_k, n_elems)``. ``k=1`` forces the
+        sequential pre-coschedule path. ``use_compiler=False`` rebuilds
+        the raw program per call and stays sequential (the paper-parity
+        baseline, kept for benchmarking the cache and the co-scheduler).
         """
         from repro.core.matvec import STAGING_CYCLES
         a_vec = np.asarray(a_vec, dtype=object)
         R, E = a_vec.shape
         x_vec = np.asarray(x_vec, dtype=object)
-        exe = (self.compile("mac", n, backend=backend) if use_compiler
-               else self._adhoc("mac", n, backend=backend))
-        s = np.zeros(R, dtype=object)
-        c = np.zeros(R, dtype=object)
+        if k is None:
+            # engine policy, clamped to what the crossbar can hold
+            k = (min(self.effective_coschedule_k("mac", n), E)
+                 if use_compiler else 1)
+        k = max(1, min(int(k), E))
+        mask = (1 << (2 * n)) - 1
+
+        if not use_compiler or k == 1:
+            exe = (self.compile("mac", n, backend=backend) if use_compiler
+                   else self._adhoc("mac", n, backend=backend))
+            s = np.zeros(R, dtype=object)
+            c = np.zeros(R, dtype=object)
+            cycles = 0
+            for e in range(E):
+                out = exe.run(self._mac_inputs(n, a_vec[:, e], x_vec[:, e],
+                                               s, c))
+                s, c = self._mac_accumulate(n, out)
+                cycles += exe.n_cycles
+                if e < E - 1:
+                    cycles += STAGING_CYCLES(n)
+            # Final recombination s + c, in-row ripple adder (5*(2N)).
+            cycles += 5 * (2 * n)
+            res = np.array([(int(x) + int(y)) & mask
+                            for x, y in zip(s, c)], dtype=object)
+            return res, cycles
+
+        # Co-scheduled: k chains, one fused pass per element group.
+        bex = self.compile_batch("mac", n, k, backend=backend)
+        s = [np.zeros(R, dtype=object) for _ in range(k)]
+        c = [np.zeros(R, dtype=object) for _ in range(k)]
+        zeros = np.zeros(R, dtype=object)
+        passes = -(-E // k)
         cycles = 0
-        for e in range(E):
-            lo, s_hi, c_hi = self._mac_on(exe, n, a_vec[:, e], x_vec[:, e],
-                                          s, c)
-            s = np.array([int(l) + (int(sh) << n)
-                          for l, sh in zip(lo, s_hi)], dtype=object)
-            c = np.array([int(ch) << n for ch in c_hi], dtype=object)
-            cycles += exe.n_cycles
-            if e < E - 1:
+        for p in range(passes):
+            group = []
+            for j in range(k):
+                e = p * k + j
+                group.append(self._mac_inputs(
+                    n,
+                    a_vec[:, e] if e < E else zeros,
+                    x_vec[:, e] if e < E else zeros,
+                    s[j], c[j]))
+            outs = bex.run(group, backend=backend)
+            for j in range(k):
+                s[j], c[j] = self._mac_accumulate(n, outs[j])
+            cycles += bex.n_cycles
+            if p < passes - 1:
                 cycles += STAGING_CYCLES(n)
-        # Final recombination s + c with the in-row ripple adder (5*(2N)).
-        cycles += 5 * (2 * n)
-        res = np.array([(int(x) + int(y)) & ((1 << (2 * n)) - 1)
-                        for x, y in zip(s, c)], dtype=object)
+        # Chain merge + final recombination: the k partial (s + c) sums
+        # ripple-add pairwise in ceil(log2 k) rounds (chains sit in
+        # disjoint column ranges of the same rows, so each round is one
+        # in-row 5*(2N) ripple), plus the usual final s+c recombination.
+        cycles += 5 * (2 * n) * (1 + math.ceil(math.log2(k)))
+        res = np.array(
+            [sum(int(s[j][r]) + int(c[j][r]) for j in range(k)) & mask
+             for r in range(R)], dtype=object)
         return res, cycles
 
     def matvec(self, A, x, n: int, *, use_compiler: bool = True,
-               backend: Union[None, str, Backend] = None
-               ) -> Tuple[np.ndarray, int]:
+               backend: Union[None, str, Backend] = None,
+               k: Optional[int] = None) -> Tuple[np.ndarray, int]:
         """A (m, e) ints, x (e,) ints -> (m,) inner products (each row is
-        an independent crossbar row, exactly the paper's Fig. 5 layout)."""
+        an independent crossbar row, exactly the paper's Fig. 5 layout;
+        ``k`` co-schedules the per-row MAC stream — see
+        :meth:`inner_product`)."""
         A = np.asarray(A, dtype=object)
         m, e = A.shape
         X = np.tile(np.asarray(x, dtype=object)[None, :], (m, 1))
         return self.inner_product(A, X, n, use_compiler=use_compiler,
-                                  backend=backend)
+                                  backend=backend, k=k)
 
     def linear(self, x, w, b=None, *, n_bits: int = 8, mode: str = "pim",
                use_pallas: bool = False):
@@ -198,9 +365,18 @@ class Engine:
             wq = quantize(w, n_bits, axis=0)
             y = dequantize(xq) @ dequantize(wq)
         elif mode == "pim":
-            # The schedule actually accounted/executed in-memory: compiled
-            # once per width through the shared cache (hits afterwards).
-            self.compile("mac", n_bits)
+            # The schedule actually accounted/executed in-memory: the
+            # co-scheduled K-MAC group, compiled once per (width, K)
+            # through the shared cache (hits afterwards) — decode-time
+            # traffic is accounted at ~K fewer crossbar passes per
+            # inner product than the sequential path. K is clamped to
+            # the crossbar's column budget (wide MACs fit fewer copies;
+            # a MAC too wide for any co-scheduling compiles plain).
+            k = self.effective_coschedule_k("mac", n_bits)
+            if k >= 2:
+                self.compile_batch("mac", n_bits, k)
+            else:
+                self.compile("mac", n_bits)
             in_dim = x.shape[-1]
             lead = x.shape[:-1]
             x2 = x.reshape(-1, in_dim)

@@ -7,34 +7,56 @@ of the crossbar bit planes. ``run`` accepts either pre-marshalled
 inputs are converted with :func:`repro.core.bits.to_bits` and, when
 *every* input arrived as integers, outputs come back as exact Python
 ints via :func:`~repro.core.bits.from_bits`.
+
+:class:`BatchedExecutable` (from :meth:`repro.engine.Engine.
+compile_batch`) is the co-scheduled variant: K independent operand sets
+scatter into disjoint partition/column ranges of one fused program, one
+backend pass serves all K, and ``cost()`` reports cycles *per program*
+(cycles-per-MAC for the MAC op) instead of per pass.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, Mapping, Optional, Union
+from dataclasses import dataclass, replace as _dc_replace
+from typing import Dict, List, Mapping, Optional, Sequence, Union
 
 import numpy as np
 
 from repro.core.bits import from_bits, to_bits
 from repro.core.costmodel import CrossbarSpec
 
-from .backends import Backend, resolve_backend
+from .backends import (Backend, PallasBackend, autotune_row_block,
+                       resolve_backend)
 
-__all__ = ["Executable", "ExecCost"]
+__all__ = ["Executable", "BatchedExecutable", "ExecCost"]
 
 
 @dataclass(frozen=True)
 class ExecCost:
-    """Cost-model view of one program invocation (per crossbar pass)."""
+    """Cost-model view of one program invocation (per crossbar pass).
+
+    ``programs`` is the number of co-scheduled programs the pass serves
+    (1 for a plain Executable), so ``cycles_per_program`` is the
+    cycles-per-MAC figure for batched MAC groups. ``row_block`` reports
+    the Pallas row-tiling in effect (explicit or engine-autotuned;
+    ``None`` for non-Pallas backends or before the first run tunes it).
+    """
 
     cycles: int
     memristors: int
     partitions: int
     latency_us: float
     energy_uj: float
+    programs: int = 1
+    row_block: Optional[int] = None
+
+    @property
+    def cycles_per_program(self) -> float:
+        return self.cycles / self.programs
 
     def as_dict(self) -> Dict:
-        return dict(self.__dict__)
+        d = dict(self.__dict__)
+        d["cycles_per_program"] = self.cycles_per_program
+        return d
 
 
 class Executable:
@@ -76,6 +98,16 @@ class Executable:
                 f"{self.n_cycles} cycles)")
 
     # ----------------------------------------------------------- cost ----
+    def _effective_row_block(self) -> Optional[int]:
+        """Pallas row tiling in effect: explicit backend policy, else the
+        engine's autotuned choice (None before the first run tunes it,
+        or on non-Pallas backends)."""
+        if not isinstance(self.backend, PallasBackend):
+            return None
+        if self.backend.row_block is not None:
+            return self.backend.row_block
+        return getattr(self.engine, "tuned_row_block", None)
+
     def cost(self) -> ExecCost:
         """Cycles/area/latency/energy from the Section V cost model."""
         prog = self.program
@@ -85,7 +117,8 @@ class Executable:
             memristors=prog.n_memristors,
             partitions=prog.n_partitions,
             latency_us=prog.n_cycles * self.crossbar.cycle_ns / 1e3,
-            energy_uj=gates * self.crossbar.energy_pj_per_gate / 1e6)
+            energy_uj=gates * self.crossbar.energy_pj_per_gate / 1e6,
+            row_block=self._effective_row_block())
 
     # --------------------------------------------------------- verify ----
     def verify(self) -> "VerifyReport":
@@ -119,6 +152,22 @@ class Executable:
         raise ValueError(
             f"input '{name}': expected (rows,) integers or "
             f"(rows, {width}) bit planes, got shape {arr.shape}")
+
+    def _autotuned(self, bk: Backend, rows: int) -> Backend:
+        """Per-Engine Pallas row-block autotune: an unpinned
+        (``row_block=None``) Pallas backend gets the block chosen from
+        the *first* batch shape this Engine runs; the choice is cached
+        on the Engine so every later executable (and its jit cache)
+        reuses one tiling."""
+        if not isinstance(bk, PallasBackend) or bk.row_block is not None:
+            return bk
+        eng = self.engine
+        rb = getattr(eng, "tuned_row_block", None)
+        if rb is None:
+            rb = autotune_row_block(rows)
+            if eng is not None:
+                eng.tuned_row_block = rb
+        return _dc_replace(bk, row_block=rb)
 
     def run(self, batch: Mapping[str, Union[np.ndarray, list]], *,
             backend: Union[None, str, Backend] = None
@@ -155,7 +204,8 @@ class Executable:
         for name, cols in prog.input_map.items():
             state[:, cols] = planes[name]
 
-        bk = resolve_backend(backend, default=self.backend)
+        bk = self._autotuned(resolve_backend(backend, default=self.backend),
+                             rows)
         final = np.asarray(bk.run_state(self.packed, state))
         if self.engine is not None:
             self.engine.runs += 1
@@ -165,3 +215,103 @@ class Executable:
             bits = final[:, cols].copy()
             out[name] = from_bits(bits) if all_ints else bits
         return out
+
+
+class BatchedExecutable:
+    """K co-scheduled programs served by one backend pass.
+
+    Produced by :meth:`repro.engine.Engine.compile_batch`. Wraps an
+    :class:`Executable` over the fused program
+    (:func:`repro.compiler.coschedule.coschedule` of K relocated copies
+    of one verified program): ``run`` scatters K operand sets into the
+    fused input names (``g{i}/<name>``), executes **one** ``run_state``
+    call, and gathers K result sets back out — so a decode step that
+    needed K crossbar passes now issues one. ``cost()`` reports
+    ``programs=K``; its ``cycles_per_program`` is the cycles-per-MAC
+    figure the throughput benchmarks track.
+    """
+
+    def __init__(self, inner: Executable, k: int,
+                 placements: "List[Placement]", base_entry: "CompiledEntry"):
+        self.inner = inner
+        self.k = k
+        self.placements = placements
+        self.base_entry = base_entry      # the single verified program
+        base = base_entry.program
+        self._in_names = list(base.input_map)
+        self._out_names = list(base.output_map)
+
+    # ---------------------------------------------------------- views ----
+    @property
+    def program(self) -> "Program":
+        """The fused program (all K copies)."""
+        return self.inner.program
+
+    @property
+    def packed(self) -> "PackedProgram":
+        return self.inner.packed
+
+    @property
+    def n_cycles(self) -> int:
+        """Cycles of one fused pass (== the single program's count for
+        K copies of the same schedule)."""
+        return self.inner.n_cycles
+
+    @property
+    def backend(self) -> Backend:
+        return self.inner.backend
+
+    def __repr__(self) -> str:
+        return (f"BatchedExecutable(k={self.k}, {self.base_entry.key}, "
+                f"backend={self.inner.backend.name}, "
+                f"{self.n_cycles} cycles/pass)")
+
+    # ----------------------------------------------------------- cost ----
+    def cost(self) -> ExecCost:
+        one = self.inner.cost()
+        return _dc_replace(one, programs=self.k)
+
+    # ------------------------------------------------------------ run ----
+    def run(self, batches: Sequence[Mapping[str, Union[np.ndarray, list]]],
+            *, backend: Union[None, str, Backend] = None
+            ) -> List[Dict[str, np.ndarray]]:
+        """Execute K operand sets in one crossbar pass.
+
+        ``batches`` is a length-K sequence; each element maps the base
+        program's input names to ``(rows,)`` integers or ``(rows,
+        n_bits)`` bit planes (all K share the same row count — rows are
+        the crossbar's SIMD axis, programs are the column axis).
+        Returns the K output dicts in order, bit-identical to K
+        independent :meth:`Executable.run` calls.
+        """
+        if len(batches) != self.k:
+            raise ValueError(f"expected {self.k} operand sets, "
+                             f"got {len(batches)}")
+        fused: Dict[str, Union[np.ndarray, list]] = {}
+        group_ints: List[bool] = []
+        for i, b in enumerate(batches):
+            pfx = self.placements[i].prefix
+            missing = sorted(set(self._in_names) - set(b))
+            if missing:
+                raise KeyError(f"operand set {i}: missing inputs {missing}")
+            for name in self._in_names:
+                fused[f"{pfx}{name}"] = b[name]
+            # Same integer-vs-bit-plane rule as Executable._marshal, per
+            # group: the fused pass marshals outputs as ints only when
+            # *every* group is integer-form, so an all-int group mixed
+            # with a bit-plane group must be converted back here to stay
+            # bit-identical to K independent runs.
+            group_ints.append(all(np.asarray(b[name]).ndim <= 1
+                                  for name in self._in_names))
+        out = self.inner.run(fused, backend=backend)
+        results: List[Dict[str, np.ndarray]] = []
+        for i in range(self.k):
+            pfx = self.placements[i].prefix
+            grp = {}
+            for name in self._out_names:
+                val = out[f"{pfx}{name}"]
+                if group_ints[i] and not all(group_ints):
+                    val = from_bits(val)
+                grp[name] = val
+            results.append(grp)
+        return results

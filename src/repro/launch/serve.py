@@ -6,9 +6,14 @@
 PIM offload: in smoke mode (or with ``--pim``) the LM-head linear runs
 in PIM mode through the process-shared :class:`repro.engine.Engine` —
 the Section-VI MAC schedule is compiled into the engine's program cache
-once (at trace time) and every decode step reuses it. The driver logs
-the engine cache counters around the decode loop; steady-state decode
-must show zero recompiles.
+once (at trace time) and every decode step reuses it. The engine
+co-schedules ``--pim-k`` MACs per crossbar pass
+(:meth:`repro.engine.Engine.compile_batch`): K independent carry-save
+accumulator chains share one wide crossbar in disjoint partition
+ranges, so decode issues ~K fewer crossbar passes per inner product
+than the sequential path (the driver logs the resulting cycles-per-MAC).
+The driver also logs the engine cache counters around the decode loop;
+steady-state decode must show zero recompiles.
 """
 from __future__ import annotations
 
@@ -46,6 +51,9 @@ def main() -> None:
                     help="run the LM head as a PIM-mode linear through "
                          "the shared engine (default: on under --smoke)")
     ap.add_argument("--pim-bits", type=int, default=8)
+    ap.add_argument("--pim-k", type=int, default=None,
+                    help="co-scheduled MACs per crossbar pass for the "
+                         "PIM LM head (default: engine policy, 4)")
     args = ap.parse_args()
 
     pim = args.smoke if args.pim is None else args.pim
@@ -57,6 +65,8 @@ def main() -> None:
     mesh = make_host_mesh(args.model_parallel)
     params = model.init(jax.random.PRNGKey(0))
     engine = get_engine()
+    if args.pim_k is not None:
+        engine.coschedule_k = args.pim_k
 
     rng = np.random.default_rng(0)
     prompts = jnp.asarray(rng.integers(3, cfg.vocab_size,
@@ -110,6 +120,26 @@ def main() -> None:
         log.info("PIM LM head: %d-bit MultPIM-MAC via shared engine "
                  "(backend=%s), compile-once verified", cfg.pim_linear_bits,
                  engine.backend.name)
+        # The co-scheduled K-MAC group the decode loop is accounted at:
+        # one fused crossbar pass serves K MACs (disjoint partition
+        # ranges), up to K-fold fewer passes than sequential MACs. A MAC
+        # too wide to co-schedule (capacity < 2) stays on the plain path.
+        k = engine.effective_coschedule_k("mac", cfg.pim_linear_bits)
+        if k >= 2:
+            cost = engine.compile_batch("mac", cfg.pim_linear_bits,
+                                        k).cost()
+            log.info("PIM LM head co-schedule: K=%d MACs/pass, "
+                     "%d cycles/pass -> %.1f cycles/MAC (sequential: %d), "
+                     "up to %.0fx fewer crossbar passes per inner product",
+                     cost.programs, cost.cycles, cost.cycles_per_program,
+                     cost.cycles, float(cost.programs))
+        elif engine.coschedule_k < 2:
+            log.info("PIM LM head co-schedule: off (requested K=%d; "
+                     "sequential passes)", engine.coschedule_k)
+        else:
+            log.info("PIM LM head co-schedule: off (MAC width %d fills "
+                     "the crossbar; sequential passes)",
+                     cfg.pim_linear_bits)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,164 @@
+"""List scheduler (PassConfig.scheduler="list") + FELIX-style op fusion
+(PassConfig.fuse): differential verification against the greedy
+pipeline across the real builders."""
+import numpy as np
+import pytest
+
+from repro.compiler import (PassConfig, build_op_graph, critical_path,
+                            list_schedule, optimize, verify_or_raise)
+from repro.compiler.schedule import ScheduleNode
+from repro.core.baselines import hajali_multiplier, rime_multiplier
+from repro.core.bits import from_bits, to_bits
+from repro.core.executor import run_numpy
+from repro.core.matvec import multpim_mac
+from repro.core.multpim import multpim_multiplier
+
+pytestmark = pytest.mark.core
+
+BUILDERS = {"multpim": multpim_multiplier, "rime": rime_multiplier,
+            "mac": multpim_mac}
+
+
+# --------------------------------------------- list-vs-greedy differential --
+@pytest.mark.parametrize("n", [4, 8, 16])
+@pytest.mark.parametrize("kind", ["multpim", "rime", "mac"])
+def test_list_scheduler_verified_and_never_worse_than_greedy(kind, n):
+    """The acceptance bar: the list-scheduler pipeline produces a
+    bit-exact program with cycle count <= greedy compaction, on every
+    builder in the suite."""
+    raw = BUILDERS[kind](n)
+    greedy, _ = optimize(raw, PassConfig())
+    listed, st = optimize(raw, PassConfig(scheduler="list"))
+    verify_or_raise(raw, listed)
+    assert listed.n_cycles <= greedy.n_cycles
+    assert st.scheduler_used in ("list", "greedy")
+    assert st.list_cycles > 0 and st.greedy_cycles > 0
+    assert st.cycles_after <= greedy.n_cycles
+
+
+def test_list_scheduler_beats_greedy_on_serial_movement():
+    """RIME's serial inter-partition movement is where from-scratch
+    rescheduling wins outright over backward hoisting."""
+    raw = rime_multiplier(16)
+    greedy, _ = optimize(raw, PassConfig())
+    listed, st = optimize(raw, PassConfig(scheduler="list"))
+    assert st.scheduler_used == "list"
+    assert listed.n_cycles < greedy.n_cycles
+    verify_or_raise(raw, listed)
+
+
+def test_pure_list_schedule_is_verified_standalone():
+    """list_schedule alone (no min-vs-greedy fallback) must already be a
+    valid, bit-exact program."""
+    raw = rime_multiplier(8)
+    ls = list_schedule(raw)
+    ls.validate()
+    verify_or_raise(raw, ls)
+
+
+def test_list_scheduled_multpim_still_multiplies():
+    n = 8
+    opt, _ = optimize(multpim_multiplier(n), PassConfig(scheduler="list"))
+    rng = np.random.default_rng(2)
+    a = rng.integers(0, 1 << n, 40)
+    b = rng.integers(0, 1 << n, 40)
+    out = run_numpy(opt, {"a": to_bits(a, n), "b": to_bits(b, n)})
+    assert all(int(g) == int(x) * int(y)
+               for g, x, y in zip(from_bits(out["out"]), a, b))
+
+
+def test_unknown_scheduler_rejected():
+    with pytest.raises(ValueError):
+        optimize(multpim_multiplier(4), PassConfig(scheduler="alap"))
+
+
+def test_scheduler_distinguishes_cache_keys():
+    from repro.compiler import OpSpec
+    a = OpSpec.make("multpim", 8)
+    b = OpSpec.make("multpim", 8, config=PassConfig(scheduler="list"))
+    assert a != b and a.content_hash() != b.content_hash()
+
+
+# ------------------------------------------------------------- op graph ----
+def test_op_graph_hazards_and_priorities():
+    """Hand-checkable DAG: load->NOT->NOT chain plus an independent op."""
+    from repro.core.isa import Gate, Op
+    from repro.core.program import Layout, ProgramBuilder
+    lay = Layout()
+    p0, p1 = lay.new_partition(), lay.new_partition()
+    a = lay.add_cell(p0, "a")
+    t = lay.add_cell(p0, "t")
+    u = lay.add_cell(p0, "u")
+    v = lay.add_cell(p1, "v")
+    w = lay.add_cell(p1, "w")
+    pb = ProgramBuilder(lay)
+    pb.declare_input("a", [a])
+    pb.declare_input("v", [v])
+    pb.init([t, u, w])
+    pb.cycle([Op(Gate.NOT, (a,), t)])
+    pb.cycle([Op(Gate.NOT, (t,), u)])
+    pb.cycle([Op(Gate.NOT, (v,), w)])
+    pb.declare_output("o", [u, w])
+    prog = pb.build()
+    nodes, succs = build_op_graph(prog)
+    # 3 SET nodes + 3 ops
+    assert len(nodes) == 6
+    sets = [x for x in nodes if x.is_set]
+    ops = [x for x in nodes if not x.is_set]
+    assert len(sets) == 3 and len(ops) == 3
+    prio = critical_path(succs)
+    # the NOT chain's first op outranks the independent op
+    not_t = next(x for x in ops if x.op.out == t)
+    not_w = next(x for x in ops if x.op.out == w)
+    assert prio[not_t.idx] > prio[not_w.idx]
+    # rescheduled: chain stays ordered, independent op packs alongside
+    ls = list_schedule(prog)
+    ls.validate()
+    verify_or_raise(prog, ls)
+    assert ls.n_cycles <= prog.n_cycles
+
+
+# ------------------------------------------------------------ op fusion ----
+@pytest.mark.parametrize("n", [8, 16])
+def test_fusion_shrinks_rime(n):
+    """NOT->NOT and MIN3-with-SET fusion must remove real cycles from
+    RIME's serial-movement schedule at N=8/16, bit-exactly."""
+    raw = rime_multiplier(n)
+    base, _ = optimize(raw, PassConfig())
+    fused, st = optimize(raw, PassConfig(fuse=True))
+    verify_or_raise(raw, fused)
+    assert fused.n_cycles < base.n_cycles
+    assert st.ops_fused > 0 and st.ops_deleted > 0
+    # fusion composes with the list scheduler for a further win
+    both, st2 = optimize(raw, PassConfig(fuse=True, scheduler="list"))
+    verify_or_raise(raw, both)
+    assert both.n_cycles <= fused.n_cycles
+
+
+def test_fusion_introduces_only_felix_gates():
+    """Fused RIME may use OR (copy) and NOR (narrowed MIN3) on top of its
+    own gate set — nothing else new."""
+    raw = rime_multiplier(8)
+    fused, _ = optimize(raw, PassConfig(fuse=True))
+    assert set(fused.gate_histogram()) <= (set(raw.gate_histogram())
+                                           | {"OR", "NOR"})
+
+
+def test_fusion_off_by_default_keeps_multpim_gate_set():
+    """The default pipeline must preserve MultPIM's NOT/MIN3-only fair
+    comparison claim."""
+    opt, st = optimize(multpim_multiplier(8))
+    assert set(opt.gate_histogram()) <= {"NOT", "MIN3", "INIT"}
+    assert st.ops_fused == 0
+
+
+def test_fusion_preserves_hajali():
+    raw = hajali_multiplier(4)
+    fused, _ = optimize(raw, PassConfig(fuse=True))
+    verify_or_raise(raw, fused)
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 16, 20)
+    b = rng.integers(0, 16, 20)
+    out = run_numpy(fused, {"a": to_bits(a, 4), "b": to_bits(b, 4)})
+    assert all(int(g) == int(x) * int(y)
+               for g, x, y in zip(from_bits(out["out"]), a, b))
