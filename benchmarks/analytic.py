@@ -16,9 +16,7 @@ Hardware constants (TPU v5e-class, per chip):
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
-from typing import Dict
 
 from repro.configs.base import ModelConfig
 from repro.configs.shapes import ShapeSpec

@@ -9,7 +9,7 @@ co-scheduling regressions.
   PYTHONPATH=src python -m benchmarks.perf_smoke                 # gate
   PYTHONPATH=src python -m benchmarks.perf_smoke --write-baseline
 
-Baseline lives at ``benchmarks/baseline_pr3.json``; regenerate it (and
+Baseline lives at ``benchmarks/baseline_pr4.json``; regenerate it (and
 review the diff!) whenever a change legitimately improves or trades off
 these numbers.
 """
@@ -21,7 +21,7 @@ import os
 import sys
 
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__),
-                                "baseline_pr3.json")
+                                "baseline_pr4.json")
 TOLERANCE = 0.05          # >5% regression fails
 
 
@@ -49,6 +49,18 @@ def collect_metrics(n: int = 8, k: int = 4, n_elems: int = 8) -> dict:
     rime_fuse = eng.compile(
         "rime", n, config=PassConfig(fuse=True,
                                      scheduler="list")).entry.stats
+
+    # Heterogeneous co-scheduled groups (the full-block serving path):
+    # a mixed [2x mac, multiply] group must merge with no cycle blowup,
+    # and the block planner's per-scope cycles-per-MAC must hold.
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.pim import plan_block
+    gex = eng.compile_group([("mac", n, 2), ("multpim", n)])
+    cfg = dataclasses.replace(get_config("gemma2-9b"),
+                              pim_linear_mode="pim", pim_block_mode="full")
+    scope = plan_block(cfg, eng).scope_metrics()
     return {
         # lower is better for every metric here
         f"cycles_per_mac_seq_n{n}": cyc_seq / n_elems,
@@ -59,6 +71,11 @@ def collect_metrics(n: int = 8, k: int = 4, n_elems: int = 8) -> dict:
         f"multpim_list_cycles_n{n}": listed.list_cycles,
         f"rime_cycles_n{n}": rime_list.cycles_after,
         f"rime_fuse_list_cycles_n{n}": rime_fuse.cycles_after,
+        f"group_hetero_pass_cycles_n{n}": gex.n_cycles,
+        f"block_ffn_cycles_per_mac_n{n}": scope["ffn"]["cycles_per_mac"],
+        f"block_attn_cycles_per_mac_n{n}": scope["attn"]["cycles_per_mac"],
+        f"block_full_cycles_per_token_n{n}": float(
+            sum(m["cycles_per_token"] for m in scope.values())),
     }
 
 

@@ -12,12 +12,11 @@ from __future__ import annotations
 
 import json
 import os
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 from repro.configs import ARCHS, SHAPES
 
-from .analytic import (HBM_BW, ICI_BW, PEAK_FLOPS, analytic_flops,
-                       roofline_terms)
+from .analytic import analytic_flops, roofline_terms
 
 Row = Tuple[str, float, str]
 

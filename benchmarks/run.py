@@ -2,15 +2,16 @@
 
 Prints ``name,us_per_call,derived`` CSV (the harness contract) and, so
 the perf trajectory is tracked across PRs, writes a machine-readable
-JSON (``--json``, default ``BENCH_pr3.json``) mapping each section to
+JSON (``--json``, default ``BENCH_pr4.json``) mapping each section to
 its rows::
 
     {"sections": {"table1": [[name, us_per_call, derived], ...], ...},
      "errors": {"section": "repr(exc)"}}
 
   PYTHONPATH=src python -m benchmarks.run [--section table1|table2|table3|
-                                           fa|opt|sim|roofline|all]
-                                          [--json BENCH_pr3.json|off]
+                                           fa|opt|sim|block_pim|roofline|
+                                           all|sec1,sec2,...]
+                                          [--json BENCH_pr4.json|off]
 """
 from __future__ import annotations
 
@@ -23,7 +24,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--section", default="all")
     ap.add_argument("--dryrun-json", default="dryrun_results.json")
-    ap.add_argument("--json", default="BENCH_pr3.json",
+    ap.add_argument("--json", default="BENCH_pr4.json",
                     help="machine-readable output path ('off' disables)")
     args = ap.parse_args()
 
@@ -38,10 +39,12 @@ def main() -> None:
         "opt": tables.opt_pipeline,
         "sim": tables.sim_throughput,
         "pim_plan": tables.pim_plan_sweep,
+        "block_pim": tables.block_pim_plan,
         "energy": tables.energy_table,
         "roofline": lambda: roofline_rows(args.dryrun_json),
     }
-    names = list(sections) if args.section == "all" else [args.section]
+    names = (list(sections) if args.section == "all"
+             else args.section.split(","))
     print("name,us_per_call,derived")
     collected = {}
     errors = {}

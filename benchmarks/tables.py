@@ -15,8 +15,7 @@ import numpy as np
 
 from repro.core.adders import (felix_full_adder_program, full_adder_program,
                                ripple_adder)
-from repro.core.baselines import (hajali_latency_formula, hajali_multiplier,
-                                  rime_latency_formula, rime_multiplier)
+from repro.core.baselines import hajali_multiplier, rime_multiplier
 from repro.core.bits import from_bits, to_bits
 from repro.core.costmodel import ALGOS
 from repro.core.executor import run_numpy
@@ -309,6 +308,40 @@ def pim_plan_sweep() -> List[Row]:
                      f"memristors_G={plan.total_memristors/1e9:.1f};"
                      f"energy_uJ={energy_uj:.0f};"
                      f"speedup_vs_floatpim={plan.speedup_vs_floatpim:.1f}x"))
+    return rows
+
+
+def block_pim_plan(archs=("gemma2-9b", "deepseek-moe-16b")) -> List[Row]:
+    """Full-block PIM serving (--pim-scope full): every linear of a
+    transformer block lowered onto heterogeneous co-scheduled crossbar
+    groups (repro.pim.plan_block). One row per (arch, scope) with the
+    scope's cycles-per-MAC — the FFN rows are the headline metric the
+    PR-4 perf tracking watches — plus an end-to-end cycles/token row."""
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.engine import Engine
+    from repro.pim import plan_block
+    rows: List[Row] = []
+    eng = Engine()
+    for arch in archs:
+        cfg = dataclasses.replace(get_config(arch),
+                                  pim_linear_mode="pim",
+                                  pim_block_mode="full")
+        plan = plan_block(cfg, eng)
+        for scope, m in plan.scope_metrics().items():
+            rows.append((f"block_pim/{arch}/{scope}", 0.0,
+                         f"cycles_per_mac={m['cycles_per_mac']:.2f};"
+                         f"macs_per_pass={m['macs_per_pass']};"
+                         f"pass_cycles={m['pass_cycles']};"
+                         f"chains={'/'.join(map(str, m['chains']))};"
+                         f"crossbars={m['crossbars']};"
+                         f"passes_per_token={m['passes_per_token']};"
+                         f"cycles_per_token={m['cycles_per_token']};"
+                         f"row_util={m['row_utilization']:.2f}"))
+        rows.append((f"block_pim/{arch}/total", 0.0,
+                     f"cycles_per_token={plan.cycles_per_token};"
+                     f"groups={len(plan.groups)}"))
     return rows
 
 

@@ -36,7 +36,7 @@ directly.
 from .cache import (CompiledEntry, ProgramCache, cache_stats, clear_cache,
                     compile_cached, register_builder)
 from .coschedule import (CapacityError, PartitionAllocator, Placement,
-                         coschedule, relocate)
+                         column_budget_counts, coschedule, relocate)
 from .depgraph import DepGraph
 from .diskcache import cache_dir, clear_disk_cache, disk_stats
 from .liveness import dead_sets, live_segments
@@ -49,7 +49,7 @@ __all__ = [
     "optimize", "PassConfig", "OptStats", "fuse_ops",
     "list_schedule", "build_op_graph", "critical_path",
     "coschedule", "relocate", "PartitionAllocator", "Placement",
-    "CapacityError",
+    "CapacityError", "column_budget_counts",
     "DepGraph", "live_segments", "dead_sets",
     "verify_equivalence", "verify_or_raise", "VerifyReport",
     "compile_cached", "register_builder", "CompiledEntry", "ProgramCache",

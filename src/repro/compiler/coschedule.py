@@ -40,7 +40,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from repro.core.program import Cycle, Layout, Program
 
 __all__ = ["Placement", "CapacityError", "PartitionAllocator",
-           "relocate", "coschedule"]
+           "relocate", "coschedule", "column_budget_counts"]
 
 
 class CapacityError(ValueError):
@@ -118,6 +118,62 @@ class PartitionAllocator:
         self.next_col = p.col_hi + 1
         self.placements.append(p)
         return p
+
+
+def column_budget_counts(progs: Sequence[Program],
+                         max_cols: Optional[int],
+                         weights: Optional[Sequence[float]] = None,
+                         max_partitions: Optional[int] = None
+                         ) -> List[int]:
+    """Heterogeneous-K allocator policy: copies per program, packed by
+    column budget rather than a uniform K.
+
+    Given the *distinct* programs that want to share one crossbar pass,
+    return how many co-scheduled copies (MAC chains, multiplier lanes,
+    ...) each should get so that the whole group fills — but never
+    exceeds — the physical column (and partition) budget. Each program
+    gets at least one copy (the group is infeasible otherwise —
+    :class:`CapacityError`); leftover budget is handed out greedily to
+    the program with the largest remaining ``weight / copies`` ratio, so
+    ops with more streamed work (e.g. a wider ``in_dim`` in a
+    weight-stationary linear) end up with proportionally more chains.
+    ``weights`` defaults to all-equal. ``max_cols=None`` means
+    unbounded: every program gets ``max(1, round(weight))`` copies.
+    """
+    if not progs:
+        raise ValueError("nothing to pack")
+    w = [1.0] * len(progs) if weights is None else [float(x) for x in weights]
+    if len(w) != len(progs):
+        raise ValueError("len(weights) != len(progs)")
+    if any(x <= 0 for x in w):
+        raise ValueError("weights must be positive")
+    if max_cols is None:
+        return [max(1, round(x)) for x in w]
+    cols = [p.layout.n_cols for p in progs]
+    parts = [p.n_partitions for p in progs]
+    counts = [1] * len(progs)
+    used_c = sum(cols)
+    used_p = sum(parts)
+    if used_c > max_cols or (max_partitions is not None
+                             and used_p > max_partitions):
+        raise CapacityError(
+            f"one copy of each of {len(progs)} programs needs {used_c} "
+            f"cols / {used_p} partitions; crossbar has "
+            f"({max_partitions}, {max_cols})")
+    while True:
+        # most under-served op first: largest weight per current copy
+        order = sorted(range(len(progs)),
+                       key=lambda i: (-w[i] / counts[i], i))
+        for i in order:
+            if used_c + cols[i] <= max_cols and (
+                    max_partitions is None
+                    or used_p + parts[i] <= max_partitions):
+                counts[i] += 1
+                used_c += cols[i]
+                used_p += parts[i]
+                break
+        else:
+            return counts
 
 
 def relocate(prog: Program, layout: Layout, placement: Placement) -> Program:

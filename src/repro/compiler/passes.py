@@ -51,7 +51,7 @@ from repro.core.program import Cycle, Layout, Program
 
 from .depgraph import (EV_SET, DepGraph, cycle_reads, cycle_writes,
                        find_seg_index, op_span)
-from .liveness import Segment, dead_sets, live_segments
+from .liveness import dead_sets, live_segments
 
 __all__ = ["PassConfig", "OptStats", "optimize", "fuse_ops",
            "eliminate_dead_inits", "coalesce_inits", "compact_cycles",

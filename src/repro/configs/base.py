@@ -11,7 +11,6 @@ The pattern tiles across ``n_layers`` (trailing partial unit allowed).
 from __future__ import annotations
 
 import dataclasses
-import math
 from dataclasses import dataclass
 from typing import Optional, Tuple
 
@@ -59,6 +58,24 @@ class ModelConfig:
     # semantics via the shared repro.engine ("off" | "pim" | "fake").
     pim_linear_mode: str = "off"
     pim_linear_bits: int = 8
+    # How much of each *block* also routes through the PIM engine
+    # (co-scheduled crossbar groups; see repro.pim.planner):
+    #   "none" — only the LM head (pim_linear_mode) is PIM-offloaded
+    #   "ffn"  — + both FFN projections (incl. MoE per-expert GEMMs)
+    #   "full" — + the attention q/k/v/o projections
+    pim_block_mode: str = "none"
+
+    def pim_scopes(self) -> Tuple[str, ...]:
+        """Linear scopes routed through the PIM engine under the current
+        mode flags (subset of ("head", "ffn", "attn"))."""
+        scopes = []
+        if self.pim_linear_mode != "off":
+            scopes.append("head")
+        if self.pim_block_mode in ("ffn", "full"):
+            scopes.append("ffn")
+        if self.pim_block_mode == "full":
+            scopes.append("attn")
+        return tuple(scopes)
 
     @property
     def hd(self) -> int:

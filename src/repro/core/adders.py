@@ -18,7 +18,7 @@ cells (two carry/carry' buffer pairs + one t2), which is how
 """
 from __future__ import annotations
 
-from typing import List, Tuple
+from typing import List
 
 from .isa import Gate, Op
 from .program import Layout, Program, ProgramBuilder

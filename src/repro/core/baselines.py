@@ -19,7 +19,6 @@ Both produce bit-exact products (validated against ``a*b`` in tests).
 """
 from __future__ import annotations
 
-import math
 from typing import List
 
 from .isa import Gate, Op

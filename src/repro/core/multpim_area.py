@@ -22,10 +22,9 @@ both cited and measured figures are reported by the benchmarks).
 from __future__ import annotations
 
 import math
-from typing import List
 
 from .isa import Gate, Op
-from .multpim import _Unit, broadcast_schedule
+from .multpim import broadcast_schedule
 from .program import Layout, Program, ProgramBuilder
 
 __all__ = ["multpim_area_multiplier"]

@@ -23,9 +23,9 @@ simulator (Section V-C).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Sequence, Tuple
 
-from .isa import Gate, Op
+from .isa import Op
 
 __all__ = ["Layout", "Cycle", "Program", "ProgramBuilder"]
 

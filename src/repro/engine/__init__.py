@@ -40,8 +40,10 @@ delegate here — new code should talk to the Engine.
 from .backends import (Backend, JaxBackend, NumpyBackend, PallasBackend,
                        autotune_row_block, backend_names, register_backend,
                        resolve_backend)
-from .engine import DEFAULT_COSCHEDULE_K, OP_KINDS, Engine, get_engine
-from .executable import BatchedExecutable, ExecCost, Executable
+from .engine import (DEFAULT_COSCHEDULE_K, OP_KINDS, Engine, GroupSpec,
+                     get_engine)
+from .executable import (BatchedExecutable, ExecCost, Executable,
+                         GroupedExecutable)
 
 # Re-exported so callers can build specs/cache keys without touching
 # repro.compiler directly.
@@ -49,7 +51,8 @@ from repro.compiler.spec import OpSpec
 
 __all__ = [
     "Engine", "get_engine", "OP_KINDS", "DEFAULT_COSCHEDULE_K",
-    "Executable", "BatchedExecutable", "ExecCost", "OpSpec",
+    "GroupSpec", "Executable", "BatchedExecutable", "GroupedExecutable",
+    "ExecCost", "OpSpec",
     "Backend", "NumpyBackend", "JaxBackend", "PallasBackend",
     "register_backend", "resolve_backend", "backend_names",
     "autotune_row_block",

@@ -19,12 +19,25 @@ pass serves K MACs. ``inner_product``/``matvec`` split their element
 streams into ``k`` independent carry-save accumulator chains and issue
 co-scheduled MAC groups instead of sequential passes (about K-fold
 fewer crossbar passes and K-fold lower cycles-per-MAC).
+
+:meth:`Engine.compile_group` generalizes that to **heterogeneous** op
+lists: ``compile_group([spec_a, spec_b, ...])`` compiles each member
+through the shared cache, allocates every member its own disjoint
+partition/column range of one crossbar, merges the cycle streams
+(:func:`repro.compiler.coschedule.coschedule` supports mixed streams
+natively) and returns a
+:class:`~repro.engine.executable.GroupedExecutable` with per-op
+scatter/gather and per-op cost rows. This is what the full-block PIM
+serving path rides: a transformer block's attention q/k/v/o and FFN
+projection MAC chains share crossbar passes instead of each owning one
+(:mod:`repro.pim.planner`).
 """
 from __future__ import annotations
 
 import math
 import threading
-from typing import Dict, Optional, Tuple, Union
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -32,9 +45,10 @@ from repro.core.bits import from_bits, to_bits
 from repro.core.costmodel import CrossbarSpec
 
 from .backends import Backend, resolve_backend
-from .executable import BatchedExecutable, Executable
+from .executable import BatchedExecutable, Executable, GroupedExecutable
 
-__all__ = ["Engine", "get_engine", "OP_KINDS", "DEFAULT_COSCHEDULE_K"]
+__all__ = ["Engine", "get_engine", "OP_KINDS", "DEFAULT_COSCHEDULE_K",
+           "GroupSpec"]
 
 # Default co-scheduled MAC group size: 4 MACs per crossbar pass keeps
 # the fused 8/16-bit MAC layouts comfortably inside a 1024-column
@@ -50,6 +64,39 @@ OP_KINDS: Dict[str, str] = {
     "multpim_mac": "multpim_mac",
     "multpim_area": "multpim_area",
 }
+
+
+@dataclass(frozen=True)
+class GroupSpec:
+    """One member of a heterogeneous co-scheduled group
+    (:meth:`Engine.compile_group`): ``copies`` independent slots of op
+    ``op`` at width ``n``. ``label`` names the member in per-op cost
+    rows (defaults to ``"{op}/n{n}"``); ``flags``/``config`` pass
+    through to the compiler exactly as in :meth:`Engine.compile`.
+    """
+
+    op: str
+    n: int
+    copies: int = 1
+    label: Optional[str] = None
+    flags: Optional[Dict] = None
+    config: Optional["PassConfig"] = None
+
+    def __post_init__(self):
+        if self.copies < 1:
+            raise ValueError("copies >= 1")
+
+    @classmethod
+    def of(cls, item: Union["GroupSpec", Tuple, Dict, str]) -> "GroupSpec":
+        if isinstance(item, cls):
+            return item
+        if isinstance(item, str):
+            raise TypeError(
+                f"group member {item!r} needs a width: pass (op, n), "
+                f"(op, n, copies), a dict, or a GroupSpec")
+        if isinstance(item, dict):
+            return cls(**item)
+        return cls(*item)
 
 
 class Engine:
@@ -119,14 +166,28 @@ class Engine:
         entry = self.cache.get_or_compile(
             kind, n, flags=flags, config=config or self.pass_config,
             verify=verify)
-        key = (entry.key, int(k))
+        fused_entry, placements = self._fused([entry] * k,
+                                              name=f"coschedule{k}"
+                                                   f"[{entry.program.name}]")
+        inner = Executable(fused_entry, resolve_backend(backend,
+                                                        self.backend),
+                           crossbar=self.crossbar, engine=self)
+        return BatchedExecutable(inner, k, placements, entry)
+
+    def _fused(self, entries: List["CompiledEntry"], name: str
+               ) -> Tuple["CompiledEntry", List["Placement"]]:
+        """Memoized co-schedule of already-compiled entries into one
+        fused program with disjoint partition/column ranges. Keyed by
+        the ordered member OpSpecs; a memo survives only while every
+        base entry is *the same object* — clear_cache() /
+        register_builder() can recompile an equal OpSpec into a new
+        entry, and a fused program built from the old one must not
+        survive that."""
+        key = tuple(e.key for e in entries)
         with self._batch_lock:
             memo = self._batch_entries.get(key)
-            # The memo is valid only while it was fused from *this* base
-            # entry — clear_cache()/register_builder() can recompile an
-            # equal OpSpec into a new entry, and a fused program built
-            # from the old one must not survive that.
-            if memo is not None and memo[0] is not entry:
+            if memo is not None and any(a is not b
+                                        for a, b in zip(memo[0], entries)):
                 memo = None
         if memo is None:
             from repro.compiler.cache import CompiledEntry
@@ -134,20 +195,87 @@ class Engine:
                                                    coschedule)
             alloc = PartitionAllocator(max_cols=self.crossbar.cols)
             prog, placements = coschedule(
-                [entry.program] * k, allocator=alloc,
-                name=f"coschedule{k}[{entry.program.name}]")
-            memo = (entry, CompiledEntry.adhoc(prog), placements)
+                [e.program for e in entries], allocator=alloc, name=name)
+            memo = (tuple(entries), CompiledEntry.adhoc(prog), placements)
             with self._batch_lock:
                 prev = self._batch_entries.get(key)
-                if prev is not None and prev[0] is entry:
+                if prev is not None and all(a is b for a, b in
+                                            zip(prev[0], entries)):
                     memo = prev           # racing fuse: first one wins
                 else:
                     self._batch_entries[key] = memo
         _, fused_entry, placements = memo
+        return fused_entry, placements
+
+    def compile_group(self, specs: Sequence, *,
+                      backend: Union[None, str, Backend] = None,
+                      verify: bool = True) -> GroupedExecutable:
+        """Co-schedule a **heterogeneous** op list into one crossbar pass.
+
+        ``specs`` is a sequence of group members — :class:`GroupSpec`
+        instances, ``(op, n)`` / ``(op, n, copies)`` tuples, or dicts
+        with those fields. Each distinct member compiles (and
+        differentially verifies) through the shared cache exactly like
+        :meth:`compile`; the members are then relocated into disjoint
+        partition/column ranges of one wide crossbar and their cycle
+        streams merged (:func:`repro.compiler.coschedule.coschedule`),
+        so a single backend pass serves every slot. The fused artifact
+        is memoized per ordered member-spec tuple on this Engine.
+        Raises :class:`repro.compiler.coschedule.CapacityError` when the
+        group exceeds the crossbar's column budget
+        (``self.crossbar.cols``).
+        """
+        members = [GroupSpec.of(s) for s in specs]
+        if not members:
+            raise ValueError("nothing to group")
+        entries: List["CompiledEntry"] = []
+        labels: List[str] = []
+        for m in members:
+            kind = OP_KINDS.get(m.op, m.op)
+            entry = self.cache.get_or_compile(
+                kind, m.n, flags=m.flags,
+                config=m.config or self.pass_config, verify=verify)
+            entries.extend([entry] * m.copies)
+            labels.extend([m.label or f"{m.op}/n{m.n}"] * m.copies)
+        name = "group[" + ",".join(dict.fromkeys(labels)) + "]"
+        fused_entry, placements = self._fused(entries, name=name)
         inner = Executable(fused_entry, resolve_backend(backend,
                                                         self.backend),
                            crossbar=self.crossbar, engine=self)
-        return BatchedExecutable(inner, k, placements, entry)
+        return GroupedExecutable(inner, placements, entries, labels=labels)
+
+    def group_counts(self, specs: Sequence,
+                     weights: Optional[Sequence[float]] = None
+                     ) -> List[int]:
+        """Heterogeneous-K policy for a group: how many co-scheduled
+        copies each member op gets, packed by this crossbar's column
+        budget (not a uniform K) and weighted by each member's streamed
+        work (:func:`repro.compiler.coschedule.column_budget_counts`).
+        The result is clamped so no member exceeds the engine's
+        ``coschedule_k`` policy times its weight share — callers feed it
+        straight back as the ``copies`` fields of
+        :meth:`compile_group`."""
+        from repro.compiler.coschedule import column_budget_counts
+        members = [GroupSpec.of(s) for s in specs]
+        progs = []
+        for m in members:
+            kind = OP_KINDS.get(m.op, m.op)
+            progs.append(self.cache.get_or_compile(
+                kind, m.n, flags=m.flags,
+                config=m.config or self.pass_config).program)
+        counts = column_budget_counts(progs, self.crossbar.cols,
+                                      weights=weights)
+        # Respect the engine-wide group-size policy: the crossbar may
+        # hold hundreds of narrow MACs, but marshalling cost grows with
+        # every extra slot, so cap total slots at coschedule_k per
+        # member on average (same knob --pim-k drives).
+        cap = max(len(members), self.coschedule_k * len(members))
+        while sum(counts) > cap:
+            i = max(range(len(counts)), key=lambda j: counts[j])
+            if counts[i] == 1:
+                break
+            counts[i] -= 1
+        return counts
 
     def max_coschedule_k(self, op: str = "mac", n: int = 16, *,
                          flags: Optional[Dict] = None,
@@ -401,6 +529,40 @@ class Engine:
         if b is not None:
             y = y + b
         return y
+
+    def ragged_linear(self, xs, we, counts, *, n_bits: int = 8,
+                      mode: str = "pim"):
+        """MoE dropless per-expert grouped GEMM under MultPIM fixed-point
+        semantics: ``xs`` (T, D) expert-sorted rows, ``we`` (E, D, F)
+        per-expert weight stack, ``counts`` (E,) ragged segment lengths.
+
+        Same mode contract as :meth:`linear` (``float`` | ``fake`` |
+        ``pim``); in ``pim`` mode every expert's GEMM is the quantized
+        integer path bit-identical to the in-memory MultPIM-MAC
+        (:func:`repro.pim.quant.qragged_matmul_exact`), compiled and
+        accounted through this engine's shared co-scheduled MAC group
+        exactly like the dense projections — the ragged path shares the
+        crossbar, it does not get a private one.
+        """
+        import jax
+
+        from repro.pim.quant import (dequantize, qragged_matmul_exact,
+                                     quantize)
+        if mode == "float":
+            return jax.lax.ragged_dot(xs, we, counts)
+        if mode == "fake":
+            xq = quantize(xs, n_bits)
+            wq = quantize(we, n_bits)
+            return jax.lax.ragged_dot(dequantize(xq), dequantize(wq), counts)
+        if mode != "pim":
+            raise ValueError(mode)
+        k = self.effective_coschedule_k("mac", n_bits)
+        if k >= 2:
+            self.compile_batch("mac", n_bits, k)
+        else:
+            self.compile("mac", n_bits)
+        return qragged_matmul_exact(quantize(xs, n_bits),
+                                    quantize(we, n_bits), counts)
 
 
 # ------------------------------------------------------ shared default ----

@@ -27,7 +27,6 @@ comfortably inside the ~16 MB VMEM budget.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -1,7 +1,7 @@
 """Production serving driver: batched prefill + greedy decode loop.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2-9b --smoke \
-      --batch 4 --prompt-len 32 --gen 32
+      --batch 4 --prompt-len 32 --gen 32 --pim-scope full
 
 PIM offload: in smoke mode (or with ``--pim``) the LM-head linear runs
 in PIM mode through the process-shared :class:`repro.engine.Engine` —
@@ -12,8 +12,19 @@ co-schedules ``--pim-k`` MACs per crossbar pass
 accumulator chains share one wide crossbar in disjoint partition
 ranges, so decode issues ~K fewer crossbar passes per inner product
 than the sequential path (the driver logs the resulting cycles-per-MAC).
-The driver also logs the engine cache counters around the decode loop;
-steady-state decode must show zero recompiles.
+
+``--pim-scope`` widens the offload beyond the LM head (full-block
+serving): ``head`` is the LM head only, ``ffn`` adds both FFN
+projections of every block (incl. the MoE ragged path's per-expert
+GEMMs), ``full`` adds the attention q/k/v/o projections. Every scope's
+linears are lowered by :func:`repro.pim.planner.plan_block` onto
+*heterogeneous co-scheduled crossbar groups*
+(:meth:`repro.engine.Engine.compile_group`): each linear owns a
+column-budget-weighted number of MAC chains inside one shared crossbar
+pass, and the weight-stationary fused schedule is compiled exactly once
+— the driver logs per-scope cycles/MAC and cycles/token, plus the
+engine cache counters around the decode loop; steady-state decode must
+show zero recompiles.
 """
 from __future__ import annotations
 
@@ -39,7 +50,8 @@ log = logging.getLogger("repro.serve")
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default="gemma2-9b",
+                    help="architecture name (repro.configs registry)")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
@@ -54,19 +66,38 @@ def main() -> None:
     ap.add_argument("--pim-k", type=int, default=None,
                     help="co-scheduled MACs per crossbar pass for the "
                          "PIM LM head (default: engine policy, 4)")
+    ap.add_argument("--pim-scope", choices=["head", "ffn", "full"],
+                    default="head",
+                    help="how much of each block the PIM engine serves: "
+                         "head = LM head only; ffn = + FFN projections "
+                         "(incl. MoE experts); full = + attention "
+                         "q/k/v/o — all via co-scheduled crossbar groups")
     args = ap.parse_args()
 
     pim = args.smoke if args.pim is None else args.pim
     cfg = get_config(args.arch, smoke=args.smoke)
     if pim:
+        block_mode = {"head": "none", "ffn": "ffn",
+                      "full": "full"}[args.pim_scope]
         cfg = dataclasses.replace(cfg, pim_linear_mode="pim",
-                                  pim_linear_bits=args.pim_bits)
+                                  pim_linear_bits=args.pim_bits,
+                                  pim_block_mode=block_mode)
     model = build_model(cfg)
     mesh = make_host_mesh(args.model_parallel)
     params = model.init(jax.random.PRNGKey(0))
     engine = get_engine()
     if args.pim_k is not None:
         engine.coschedule_k = args.pim_k
+
+    # Full-block serving plan: lower every enabled scope's linears onto
+    # co-scheduled crossbar groups *before* prefill/decode — the fused
+    # weight-stationary schedules compile (and verify) exactly once
+    # here; every decode step below reuses them through the shared
+    # engine cache (the recompile check at the end enforces it).
+    plan = None
+    if pim:
+        from repro.pim import plan_block
+        plan = plan_block(cfg, engine)
 
     rng = np.random.default_rng(0)
     prompts = jnp.asarray(rng.integers(3, cfg.vocab_size,
@@ -140,6 +171,30 @@ def main() -> None:
             log.info("PIM LM head co-schedule: off (MAC width %d fills "
                      "the crossbar; sequential passes)",
                      cfg.pim_linear_bits)
+        # Per-scope accounting for the full-block path: which linears
+        # share a crossbar pass, with how many chains, at what
+        # cycles/MAC (scope="head" is the LM head group; "ffn"/"attn"
+        # appear under --pim-scope ffn|full).
+        log.info("PIM scope=%s: %d co-scheduled group(s) over scopes %s",
+                 args.pim_scope, len(plan.groups), list(plan.scopes))
+        for scope, row in plan.scope_metrics().items():
+            log.info("PIM scope [%s]: %s on %d crossbar(s) | chains=%s "
+                     "-> %d MACs/pass @ %d cyc/pass = %.1f cycles/MAC | "
+                     "%d passes/token, %s cycles/token "
+                     "(row util %.0f%%)",
+                     scope, ",".join(row["linears"]), row["crossbars"],
+                     row["chains"], row["macs_per_pass"],
+                     row["pass_cycles"], row["cycles_per_mac"],
+                     row["passes_per_token"],
+                     f"{row['cycles_per_token']:,}",
+                     100 * row["row_utilization"])
+        if plan.groups:
+            us = plan.cycles_per_token * engine.crossbar.cycle_ns / 1e3
+            log.info("PIM block plan: %s cycles/token end-to-end "
+                     "(%.1f us @ %.0f ns/cycle), weight-stationary "
+                     "layouts reused across all %d decode steps",
+                     f"{plan.cycles_per_token:,}", us,
+                     engine.crossbar.cycle_ns, args.gen - 1)
 
 
 if __name__ == "__main__":

@@ -15,7 +15,6 @@ from __future__ import annotations
 import argparse
 import json
 import logging
-import os
 import time
 
 import jax
@@ -27,7 +26,7 @@ from repro.launch.mesh import make_host_mesh
 from repro.models import build_model
 from repro.optim import AdamWConfig
 from repro.train import (RetryingRunner, latest_step, make_train_step,
-                         restore_checkpoint, save_checkpoint)
+                         restore_checkpoint)
 
 logging.basicConfig(level=logging.INFO, format="%(message)s")
 log = logging.getLogger("repro.train")

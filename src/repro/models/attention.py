@@ -13,7 +13,29 @@ import jax.numpy as jnp
 
 from .layers import softcap as _softcap
 
-__all__ = ["attend", "decode_attend", "KVCache"]
+__all__ = ["attend", "decode_attend", "KVCache", "projection_shapes"]
+
+
+def projection_shapes(cfg) -> "list[Tuple[str, int, int]]":
+    """The attention block's linear inventory: (name, in_dim, out_dim)
+    for the q/k/v/o projections — plus the cross-attention xq/xk/xv/xo
+    pair carried by enc-dec decoder blocks — the shapes the PIM block
+    planner (:mod:`repro.pim.planner`) lowers onto co-scheduled crossbar
+    groups under ``cfg.pim_block_mode == "full"``. Kept next to the
+    attention math so the planner can never drift from what the block
+    computes.
+    """
+    d = cfg.d_model
+    shapes = [("attn.q", d, cfg.q_dim),
+              ("attn.k", d, cfg.kv_dim),
+              ("attn.v", d, cfg.kv_dim),
+              ("attn.o", cfg.q_dim, d)]
+    if cfg.family == "encdec":
+        shapes += [("attn.xq", d, cfg.q_dim),
+                   ("attn.xk", d, cfg.kv_dim),
+                   ("attn.xv", d, cfg.kv_dim),
+                   ("attn.xo", cfg.q_dim, d)]
+    return shapes
 
 NEG_INF = -2.3819763e38
 

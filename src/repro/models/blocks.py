@@ -22,7 +22,7 @@ token-independent, so prefill and decode agree bit-for-bit.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -30,9 +30,42 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 
 from .attention import KVCache, attend, decode_attend
-from .layers import Initializer, gelu_mlp, rms_norm, rope, softcap, swiglu
+from .layers import Initializer, rms_norm, rope
 
-__all__ = ["init_block", "apply_block", "init_state"]
+__all__ = ["init_block", "apply_block", "init_state", "pim_proj"]
+
+
+# ------------------------------------------------------ PIM offload ----
+def pim_proj(cfg: ModelConfig, x: jnp.ndarray, w: jnp.ndarray, *,
+             scope: str) -> jnp.ndarray:
+    """One block linear, optionally offloaded to the PIM engine.
+
+    ``scope`` is ``"attn"`` (q/k/v/o projections) or ``"ffn"`` (both
+    FFN projections); whether it routes through the engine is governed
+    by ``cfg.pim_block_mode`` (:meth:`ModelConfig.pim_scopes`). The
+    engine path quantizes to ``cfg.pim_linear_bits``, runs the integer
+    matmul bit-identical to the in-memory MultPIM-MAC, and compiles the
+    co-scheduled MAC group into the process-shared program cache at
+    trace time — every projection of every layer reuses the one
+    verified schedule (weight-stationary: decode steps never recompile).
+    """
+    if scope not in cfg.pim_scopes():
+        return x @ w
+    from repro.engine import get_engine   # lazy: models stay engine-free
+    mode = "pim" if cfg.pim_linear_mode == "off" else cfg.pim_linear_mode
+    return get_engine().linear(x, w, n_bits=cfg.pim_linear_bits, mode=mode)
+
+
+def _pim_ragged(cfg: ModelConfig, xs: jnp.ndarray, we: jnp.ndarray,
+                counts: jnp.ndarray) -> jnp.ndarray:
+    """MoE per-expert grouped GEMM, PIM-offloaded under the ``"ffn"``
+    scope (the expert FFNs are the block's FFN projections)."""
+    if "ffn" not in cfg.pim_scopes():
+        return jax.lax.ragged_dot(xs, we, counts)
+    from repro.engine import get_engine
+    mode = "pim" if cfg.pim_linear_mode == "off" else cfg.pim_linear_mode
+    return get_engine().ragged_linear(xs, we, counts,
+                                      n_bits=cfg.pim_linear_bits, mode=mode)
 
 
 # ============================================================ attention ====
@@ -60,9 +93,13 @@ def _init_mlp(cfg: ModelConfig, ini: Initializer, d_ff: int) -> Dict[str, Any]:
 
 
 def _apply_mlp(cfg: ModelConfig, p: Dict[str, Any], x: jnp.ndarray):
+    # Same math as layers.swiglu/gelu_mlp, with each projection routed
+    # through the PIM hook (plain matmul when the scope is off).
+    h1 = pim_proj(cfg, x, p["w1"], scope="ffn")
     if "w3" in p:
-        return swiglu(x, p["w1"], p["w3"], p["w2"])
-    return gelu_mlp(x, p["w1"], p["w2"])
+        gated = jax.nn.silu(h1) * pim_proj(cfg, x, p["w3"], scope="ffn")
+        return pim_proj(cfg, gated, p["w2"], scope="ffn")
+    return pim_proj(cfg, jax.nn.gelu(h1), p["w2"], scope="ffn")
 
 
 def init_attn_block(cfg: ModelConfig, ini: Initializer, kind: str,
@@ -82,9 +119,12 @@ def init_attn_block(cfg: ModelConfig, ini: Initializer, kind: str,
 
 def _qkv(cfg: ModelConfig, p, xn, pos):
     b, s, _ = xn.shape
-    q = (xn @ p["wq"]).reshape(b, s, cfg.n_heads, cfg.hd)
-    k = (xn @ p["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.hd)
-    v = (xn @ p["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.hd)
+    q = pim_proj(cfg, xn, p["wq"], scope="attn").reshape(
+        b, s, cfg.n_heads, cfg.hd)
+    k = pim_proj(cfg, xn, p["wk"], scope="attn").reshape(
+        b, s, cfg.n_kv_heads, cfg.hd)
+    v = pim_proj(cfg, xn, p["wv"], scope="attn").reshape(
+        b, s, cfg.n_kv_heads, cfg.hd)
     if cfg.qk_norm:
         q = rms_norm(q, p["qn"], cfg.norm_eps)
         k = rms_norm(k, p["kn"], cfg.norm_eps)
@@ -123,17 +163,19 @@ def apply_attn_block(cfg: ModelConfig, p, x, *, pos, state, enc_out, mode,
                                  window=window, cap=cfg.softcap_attn)
         new_state = dict(state)
         new_state["self"] = cache._asdict()
-    x = x + (o.reshape(b, s, cfg.q_dim) @ p["wo"])
+    x = x + pim_proj(cfg, o.reshape(b, s, cfg.q_dim), p["wo"], scope="attn")
 
     if cfg.family == "encdec" and enc_out is not None:
         xn2 = rms_norm(x, p["lnx"], cfg.norm_eps)
-        qx = (xn2 @ p["xq"]).reshape(b, s, cfg.n_heads, cfg.hd)
-        kx = (enc_out @ p["xk"]).reshape(b, enc_out.shape[1],
-                                         cfg.n_kv_heads, cfg.hd)
-        vx = (enc_out @ p["xv"]).reshape(b, enc_out.shape[1],
-                                         cfg.n_kv_heads, cfg.hd)
+        qx = pim_proj(cfg, xn2, p["xq"], scope="attn").reshape(
+            b, s, cfg.n_heads, cfg.hd)
+        kx = pim_proj(cfg, enc_out, p["xk"], scope="attn").reshape(
+            b, enc_out.shape[1], cfg.n_kv_heads, cfg.hd)
+        vx = pim_proj(cfg, enc_out, p["xv"], scope="attn").reshape(
+            b, enc_out.shape[1], cfg.n_kv_heads, cfg.hd)
         ox = attend(qx, kx, vx, causal=False)
-        x = x + (ox.reshape(b, s, cfg.q_dim) @ p["xo"])
+        x = x + pim_proj(cfg, ox.reshape(b, s, cfg.q_dim), p["xo"],
+                         scope="attn")
 
     xn3 = rms_norm(x, p["ln2"], cfg.norm_eps)
     x = x + _apply_mlp(cfg, p["mlp"], xn3)
@@ -201,9 +243,9 @@ def _moe_ffn_chunk(cfg: ModelConfig, p, x2: jnp.ndarray) -> jnp.ndarray:
     counts = jnp.bincount(flat_e, length=e.n_experts).astype(jnp.int32)
 
     xs = x2[st]                                            # (T*k, d)
-    h = jax.lax.ragged_dot(xs, p["we1"], counts)
-    h3 = jax.lax.ragged_dot(xs, p["we3"], counts)
-    y = jax.lax.ragged_dot(jax.nn.silu(h) * h3, p["we2"], counts)
+    h = _pim_ragged(cfg, xs, p["we1"], counts)
+    h3 = _pim_ragged(cfg, xs, p["we3"], counts)
+    y = _pim_ragged(cfg, jax.nn.silu(h) * h3, p["we2"], counts)
     out = jnp.zeros_like(x2).at[st].add(y * sg[:, None])
     if e.n_shared:
         out = out + _apply_mlp(cfg, p["shared"], x2)

@@ -1,7 +1,7 @@
 """Shared neural primitives (pure functions over explicit param pytrees)."""
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,6 @@ the whole model's KV caches / recurrent states through ``lax.scan``.
 """
 from __future__ import annotations
 
-import math
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -36,6 +35,13 @@ def head_matmul(cfg: ModelConfig, x: jnp.ndarray,
     Section-VI MAC schedule for ``cfg.pim_linear_bits`` is compiled into
     the engine's program cache at trace time (once per width) and the
     matmul itself uses the bit-identical quantized integer path.
+
+    This is the ``"head"`` scope of the PIM offload; the *block* scopes
+    (attention q/k/v/o and FFN projections, incl. the MoE ragged path)
+    route through :func:`repro.models.blocks.pim_proj` under
+    ``cfg.pim_block_mode`` and share the same engine, so one verified
+    MAC schedule serves the whole model (see
+    :func:`repro.pim.planner.plan_block` for the crossbar grouping).
     """
     if cfg.pim_linear_mode == "off":
         return x @ head

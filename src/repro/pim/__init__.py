@@ -1,8 +1,14 @@
 """PIM systems integration: quantization, PIMLinear, crossbar planner."""
-from .quant import QTensor, quantize, dequantize, qmatmul_exact
+from .quant import (QTensor, quantize, dequantize, qmatmul_exact,
+                    qragged_matmul_exact)
 from .pim_linear import PIMLinearSpec, pim_linear_apply
-from .planner import GemmShape, PIMPlan, plan_model, gemms_from_config
+from .planner import (BlockLinear, BlockPlan, GemmShape, LinearGroup,
+                      PIMPlan, block_linears, gemms_from_config, plan_block,
+                      plan_model)
 
 __all__ = ["QTensor", "quantize", "dequantize", "qmatmul_exact",
+           "qragged_matmul_exact",
            "PIMLinearSpec", "pim_linear_apply",
-           "GemmShape", "PIMPlan", "plan_model", "gemms_from_config"]
+           "GemmShape", "PIMPlan", "plan_model", "gemms_from_config",
+           "BlockLinear", "LinearGroup", "BlockPlan", "block_linears",
+           "plan_block"]

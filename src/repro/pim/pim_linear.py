@@ -31,11 +31,21 @@ class PIMLinearSpec:
     n_bits: int = 8
     mode: str = "float"           # float | pim | fake
     use_pallas: bool = False      # route the int matmul through Pallas
+    # Which block-plan scope this linear belongs to ("head" | "ffn" |
+    # "attn") — the co-scheduled crossbar group it shares passes with
+    # under full-block serving (repro.pim.planner.plan_block).
+    scope: str = "head"
 
     def cost(self, batch_rows: int,
              spec: CrossbarSpec = CrossbarSpec()) -> GemmCost:
         return gemm_cost(batch_rows, self.in_dim, self.out_dim,
                          self.n_bits, spec=spec)
+
+    def as_block_linear(self) -> "BlockLinear":
+        """This spec as the planner's inventory record."""
+        from .planner import BlockLinear
+        return BlockLinear(name=f"{self.scope}.linear", scope=self.scope,
+                           in_dim=self.in_dim, out_dim=self.out_dim)
 
 
 def pim_linear_apply(spec: PIMLinearSpec, x: jnp.ndarray, w: jnp.ndarray,

@@ -6,15 +6,29 @@ serving it on a memristive PIM accelerator: total crossbars, memristors,
 per-token latency (cycles and microseconds), energy proxy, and the
 speedup over a FloatPIM-style mapping — i.e., the paper's Table III
 scaled up from an 8-element mat-vec to full LM workloads.
+
+:func:`plan_block` is the **full-block serving planner**: it lowers
+every linear of a transformer block — attention q/k/v/o, both FFN
+projections (including the MoE ragged path's per-expert GEMMs) and the
+LM head — into *co-scheduled crossbar groups*. Linears in one scope
+share crossbar passes: each gets a number of MAC chains packed by the
+physical column budget (heterogeneous-K, proportional to its streamed
+work — :func:`repro.compiler.coschedule.column_budget_counts`), the
+group compiles once through :meth:`repro.engine.Engine.compile_group`
+(weight-stationary: the fused schedule and the weights' crossbar layout
+are reused by every decode step, zero recompiles), and the plan reports
+per-scope cycles/MAC plus a per-token cycle estimate.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.costmodel import CrossbarSpec, gemm_cost
 
-__all__ = ["GemmShape", "PIMPlan", "plan_model"]
+__all__ = ["GemmShape", "PIMPlan", "plan_model", "BlockLinear",
+           "LinearGroup", "BlockPlan", "block_linears", "plan_block"]
 
 
 @dataclass(frozen=True)
@@ -78,6 +92,242 @@ def plan_model(gemms: List[GemmShape], n_bits: int = 8,
         plan.total_cycles_floatpim += f.cycles * g.count
         plan.total_memristors += c.memristors * g.count
         plan.total_crossbars += c.crossbars * g.count
+    return plan
+
+
+# ===================================================== block serving ====
+@dataclass(frozen=True)
+class BlockLinear:
+    """One linear of a transformer block, as the planner sees it:
+    weight-stationary on the crossbar (``out_dim`` output features ->
+    rows, ``in_dim`` elements streamed as MAC steps), ``count`` parallel
+    instances per model step (layers of that kind x active experts)."""
+
+    name: str
+    scope: str            # "attn" | "ffn" | "head"
+    in_dim: int
+    out_dim: int
+    count: int = 1
+
+    @property
+    def stream(self) -> int:
+        """MAC steps per token per crossbar row (in_dim x instances)."""
+        return self.in_dim * self.count
+
+
+def block_linears(cfg) -> List[BlockLinear]:
+    """The model's full linear inventory by PIM scope.
+
+    Attention shapes come from the attention module itself
+    (:func:`repro.models.attention.projection_shapes`) so the planner
+    cannot drift from what the blocks compute; FFN covers dense blocks,
+    the MoE ragged path's active per-expert GEMMs and the RG-LRU block
+    MLP; the LM head is its own scope. The router and the recurrent
+    gate projections stay digital (tiny, latency-critical).
+    """
+    from repro.models.attention import projection_shapes
+    d = cfg.d_model
+    nm3 = cfg.mlp_type == "swiglu"
+    kinds = cfg.layer_kinds()
+    n_attn = sum(1 for k in kinds if k in ("g", "l", "m", "d"))
+    n_dense = sum(1 for k in kinds if k in ("g", "l"))
+    n_moe = sum(1 for k in kinds if k == "m")
+    n_dmoe = sum(1 for k in kinds if k == "d")
+    n_rglru = (sum(1 for k in kinds if k == "r")
+               if cfg.family != "rwkv" else 0)
+
+    # Whisper-style encoders run plain self-attention blocks through the
+    # same hooks (encode() scales the config but keeps the PIM flags),
+    # so their q/k/v/o and FFN projections count toward the same scopes.
+    n_enc = cfg.enc_layers if cfg.family == "encdec" else 0
+
+    out: List[BlockLinear] = []
+    if n_attn or n_enc:
+        for name, i, o in projection_shapes(cfg):
+            # cross-attention (attn.x*) lives only in decoder blocks
+            count = n_attn if name.startswith("attn.x") else n_attn + n_enc
+            if count:
+                out.append(BlockLinear(name, "attn", i, o, count))
+
+    def ffn(tag: str, f: int, count: int) -> None:
+        if not count:
+            return
+        out.append(BlockLinear(f"{tag}.w1", "ffn", d, f, count))
+        if nm3:
+            out.append(BlockLinear(f"{tag}.w3", "ffn", d, f, count))
+        out.append(BlockLinear(f"{tag}.w2", "ffn", f, d, count))
+
+    ffn("ffn", cfg.d_ff, n_dense + n_rglru + n_enc)
+    if n_moe:
+        e = cfg.moe
+        ffn("moe.expert", cfg.d_ff, n_moe * (e.top_k + e.n_shared))
+    if n_dmoe:
+        ffn("moe.dense", cfg.moe.d_ff_dense or cfg.d_ff, n_dmoe)
+    out.append(BlockLinear("lm_head", "head", d, cfg.vocab_size, 1))
+    return out
+
+
+@dataclass
+class LinearGroup:
+    """One co-scheduled crossbar group: every linear in ``linears``
+    shares the group's fused passes, linear ``i`` owning ``chains[i]``
+    MAC chains in its private partition/column range."""
+
+    scope: str
+    linears: List[BlockLinear]
+    chains: List[int]
+    pass_cycles: int
+    cols_used: int
+    n_bits: int
+    staging_cycles: int
+
+    @property
+    def macs_per_pass(self) -> int:
+        return sum(self.chains)
+
+    @property
+    def cycles_per_mac(self) -> float:
+        return self.pass_cycles / max(1, self.macs_per_pass)
+
+    @property
+    def passes_per_token(self) -> int:
+        """Lockstep passes to drain the longest member stream."""
+        return max(-(-l.stream // c)
+                   for l, c in zip(self.linears, self.chains))
+
+    @property
+    def cycles_per_token(self) -> int:
+        """Fused passes + inter-pass staging + the worst member's
+        carry-save chain merge / final recombination (in-row ripple
+        adds, chains sit in disjoint column ranges of the same rows)."""
+        p = self.passes_per_token
+        recomb = 5 * (2 * self.n_bits) * (
+            1 + max(math.ceil(math.log2(c)) if c > 1 else 0
+                    for c in self.chains))
+        return p * self.pass_cycles + (p - 1) * self.staging_cycles + recomb
+
+    @property
+    def rows(self) -> int:
+        """Crossbar rows the group engages (SIMD axis = the widest
+        member's output features)."""
+        return max(l.out_dim for l in self.linears)
+
+    @property
+    def row_utilization(self) -> float:
+        """Chain-weighted share of engaged rows doing useful work
+        (members narrower than the widest leave rows idle)."""
+        busy = sum(c * l.out_dim for l, c in zip(self.linears, self.chains))
+        return busy / (self.rows * max(1, self.macs_per_pass))
+
+
+@dataclass
+class BlockPlan:
+    """Full-block PIM serving plan: co-scheduled crossbar groups, one or
+    more per scope. Groups of one scope occupy *separate* crossbars and
+    run in parallel (weight-stationary — every crossbar keeps its
+    weights resident across decode steps); scopes execute sequentially
+    (attention feeds the FFN feeds the head)."""
+
+    n_bits: int
+    groups: List[LinearGroup] = field(default_factory=list)
+
+    def scope_groups(self, scope: str) -> List[LinearGroup]:
+        return [g for g in self.groups if g.scope == scope]
+
+    @property
+    def scopes(self) -> List[str]:
+        return list(dict.fromkeys(g.scope for g in self.groups))
+
+    @property
+    def cycles_per_token(self) -> int:
+        """Sequential over scopes, parallel over a scope's crossbars."""
+        return sum(max(g.cycles_per_token for g in self.scope_groups(s))
+                   for s in self.scopes)
+
+    def scope_metrics(self) -> Dict[str, Dict]:
+        """Per-scope accounting rows (what serve logs and BENCH track).
+        A scope's parallel crossbars aggregate as one wide pass: their
+        pass windows coincide (same MAC schedule), so the scope serves
+        the summed MACs per pass window."""
+        out: Dict[str, Dict] = {}
+        for scope in self.scopes:
+            gs = self.scope_groups(scope)
+            macs = sum(g.macs_per_pass for g in gs)
+            pass_cycles = max(g.pass_cycles for g in gs)
+            out[scope] = {
+                "linears": [l.name for g in gs for l in g.linears],
+                "chains": [c for g in gs for c in g.chains],
+                "crossbars": len(gs),
+                "macs_per_pass": macs,
+                "pass_cycles": pass_cycles,
+                "cycles_per_mac": pass_cycles / max(1, macs),
+                "passes_per_token": max(g.passes_per_token for g in gs),
+                "cycles_per_token": max(g.cycles_per_token for g in gs),
+                "cols_used": sum(g.cols_used for g in gs),
+                "row_utilization": (
+                    sum(g.row_utilization * g.macs_per_pass for g in gs)
+                    / max(1, macs)),
+            }
+        return out
+
+    def summary(self) -> str:
+        lines = [f"block PIM plan ({self.n_bits}-bit, "
+                 f"{len(self.groups)} co-scheduled groups):"]
+        for g in self.groups:
+            names = ",".join(l.name for l in g.linears)
+            lines.append(
+                f"  [{g.scope}] {names}: chains={g.chains} "
+                f"({g.macs_per_pass} MACs/pass, {g.cols_used} cols), "
+                f"{g.pass_cycles} cyc/pass -> {g.cycles_per_mac:.1f} "
+                f"cyc/MAC, {g.passes_per_token} passes/token "
+                f"({g.cycles_per_token:,} cyc)")
+        if self.groups:
+            lines.append(f"  TOTAL {self.cycles_per_token:,} cycles/token")
+        return "\n".join(lines)
+
+
+def plan_block(cfg, engine=None,
+               scopes: Optional[Tuple[str, ...]] = None) -> BlockPlan:
+    """Lower a model's block linears onto co-scheduled crossbar groups.
+
+    ``scopes`` defaults to what the config's PIM flags enable
+    (:meth:`repro.configs.base.ModelConfig.pim_scopes`). Per scope, all
+    linears share one heterogeneous group: chain counts are packed by
+    the engine's physical column budget weighted by each linear's
+    streamed work (``in_dim x count``), and the fused schedule compiles
+    once through :meth:`Engine.compile_group` — decode steps reuse the
+    memoized weight-stationary layout, so serving pays compilation
+    exactly once per (scope, width).
+    """
+    from repro.core.matvec import STAGING_CYCLES
+    from repro.engine import GroupSpec, get_engine
+    eng = engine if engine is not None else get_engine()
+    scopes = cfg.pim_scopes() if scopes is None else scopes
+    n = cfg.pim_linear_bits
+    plan = BlockPlan(n_bits=n)
+    linears = block_linears(cfg)
+    mac_cols = eng.compile("mac", n).program.layout.n_cols
+    per_group = max(1, (eng.crossbar.cols or 1 << 30) // mac_cols)
+    for scope in scopes:
+        members = [l for l in linears if l.scope == scope]
+        if not members:
+            continue
+        # A scope with more linears than the crossbar holds MAC copies
+        # splits into several passes-sharing groups (first-fit, in
+        # inventory order so a layer's w1/w3/w2 stay together).
+        for lo in range(0, len(members), per_group):
+            part = members[lo:lo + per_group]
+            base = [GroupSpec("mac", n, label=l.name) for l in part]
+            chains = eng.group_counts(base,
+                                      weights=[l.stream for l in part])
+            gex = eng.compile_group(
+                [GroupSpec("mac", n, copies=c, label=l.name)
+                 for l, c in zip(part, chains)])
+            plan.groups.append(LinearGroup(
+                scope=scope, linears=part, chains=chains,
+                pass_cycles=gex.n_cycles,
+                cols_used=sum(p.n_cols for p in gex.placements),
+                n_bits=n, staging_cycles=STAGING_CYCLES(n)))
     return plan
 
 

@@ -12,10 +12,6 @@ the per-layer remat scan this is what lets seq=4096 x batch=256 fit the
 """
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional, Tuple
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P

@@ -1,0 +1,254 @@
+"""Full-block PIM serving: block linear inventory, co-scheduled group
+planning (chains by column budget, weight-stationary reuse), the model
+hooks that route attention/FFN/MoE projections through the engine, and
+the quantized ragged path's parity with the dense correction."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.engine import Engine, get_engine
+from repro.pim import (block_linears, plan_block, qmatmul_exact,
+                       qragged_matmul_exact, quantize)
+
+pytestmark = pytest.mark.pim
+
+
+def _pim_cfg(arch="gemma2-9b", block_mode="full"):
+    cfg = get_config(arch, smoke=True)
+    return dataclasses.replace(cfg, pim_linear_mode="pim",
+                               pim_linear_bits=8,
+                               pim_block_mode=block_mode)
+
+
+# ------------------------------------------------------------ inventory ----
+def test_pim_scopes_follow_mode_flags():
+    cfg = get_config("gemma2-9b", smoke=True)
+    assert cfg.pim_scopes() == ()
+    assert _pim_cfg(block_mode="none").pim_scopes() == ("head",)
+    assert _pim_cfg(block_mode="ffn").pim_scopes() == ("head", "ffn")
+    assert _pim_cfg(block_mode="full").pim_scopes() == ("head", "ffn",
+                                                        "attn")
+
+
+def test_block_linears_cover_attention_and_ffn():
+    cfg = _pim_cfg()
+    names = {l.name: l for l in block_linears(cfg)}
+    for want in ("attn.q", "attn.k", "attn.v", "attn.o",
+                 "ffn.w1", "ffn.w3", "ffn.w2", "lm_head"):
+        assert want in names, want
+    assert names["attn.q"].scope == "attn"
+    assert names["ffn.w2"].scope == "ffn"
+    assert names["lm_head"].scope == "head"
+    # shapes match the model's own projection inventory
+    from repro.models.attention import projection_shapes
+    for pname, i, o in projection_shapes(cfg):
+        assert (names[pname].in_dim, names[pname].out_dim) == (i, o)
+
+
+def test_block_linears_moe_counts_active_experts():
+    cfg = _pim_cfg("deepseek-moe-16b")
+    names = {l.name: l for l in block_linears(cfg)}
+    e = cfg.moe
+    kinds = cfg.layer_kinds()
+    n_moe = sum(1 for k in kinds if k == "m")
+    assert names["moe.expert.w1"].count == n_moe * (e.top_k + e.n_shared)
+    assert names["moe.expert.w2"].in_dim == cfg.d_ff
+    assert "moe.dense.w1" in names          # the 'd' layer rides along
+    assert all(l.name != "moe.router" for l in block_linears(cfg))
+
+
+def test_block_linears_encdec_counts_cross_attention_and_encoder():
+    """Regression: enc-dec decoder blocks also route their
+    cross-attention xq/xk/xv/xo through pim_proj, and the encoder's
+    self-attention blocks share the hooks — the planner inventory must
+    count both or per-scope cycles/MAC under-reports."""
+    cfg = _pim_cfg("whisper-small")
+    names = {l.name: l for l in block_linears(cfg)}
+    kinds = cfg.layer_kinds()
+    n_attn = sum(1 for k in kinds if k in ("g", "l", "m", "d"))
+    for x in ("attn.xq", "attn.xk", "attn.xv", "attn.xo"):
+        assert x in names, x
+        assert names[x].count == n_attn          # decoder blocks only
+    assert names["attn.q"].count == n_attn + cfg.enc_layers
+    assert names["ffn.w1"].count >= cfg.enc_layers
+    # non-encdec configs carry no cross-attention entries
+    assert all(not l.name.startswith("attn.x")
+               for l in block_linears(_pim_cfg("gemma2-9b")))
+
+
+# ------------------------------------------------------------- planning ----
+def test_plan_block_groups_by_scope_with_budgeted_chains():
+    cfg = _pim_cfg()
+    eng = Engine()
+    plan = plan_block(cfg, eng)
+    assert plan.scopes == ["head", "ffn", "attn"]
+    met = plan.scope_metrics()
+    ffn = met["ffn"]
+    assert ffn["linears"] == ["ffn.w1", "ffn.w3", "ffn.w2"]
+    assert all(c >= 1 for c in ffn["chains"])
+    # chains are work-weighted: w2 streams 2x the elements of w1
+    chains = dict(zip(ffn["linears"], ffn["chains"]))
+    assert chains["ffn.w2"] >= chains["ffn.w1"]
+    # every scope's fused pass is a real co-scheduled group
+    for scope, row in met.items():
+        assert row["macs_per_pass"] == sum(row["chains"])
+        assert row["cycles_per_mac"] == pytest.approx(
+            row["pass_cycles"] / row["macs_per_pass"])
+        assert row["cycles_per_token"] > 0
+        assert 0 < row["row_utilization"] <= 1
+    assert plan.cycles_per_token == sum(
+        max(g.cycles_per_token for g in plan.scope_groups(s))
+        for s in plan.scopes)
+    assert "cyc/MAC" in plan.summary()
+
+
+def test_plan_block_compiles_once_and_reuses_weight_stationary_layouts():
+    """Decode-step reuse: planning twice on one engine reuses the same
+    fused packed tables (the weight-stationary layout) and triggers no
+    recompiles after the first plan."""
+    from repro.compiler import ProgramCache
+    cache = ProgramCache(use_disk=False)
+    eng = Engine(cache=cache)
+    cfg = _pim_cfg()
+    p1 = plan_block(cfg, eng)
+    compiles = cache.stats()["compiles"]
+    p2 = plan_block(cfg, eng)
+    assert cache.stats()["compiles"] == compiles      # zero recompiles
+    g1 = eng.compile_group(
+        [("mac", 8)] )  # sanity: engine still serves other groups
+    assert g1 is not None
+    assert [g.chains for g in p1.groups] == [g.chains for g in p2.groups]
+
+
+def test_plan_block_splits_oversized_scopes():
+    """A scope with more linears than the crossbar holds MAC copies
+    splits into several parallel crossbar groups instead of raising."""
+    from repro.core.costmodel import CrossbarSpec
+    eng = Engine()
+    one = eng.compile("mac", 8).program.layout.n_cols
+    tiny = Engine(crossbar=CrossbarSpec(cols=2 * one))   # 2 MACs max
+    cfg = _pim_cfg()
+    plan = plan_block(cfg, tiny, scopes=("attn",))
+    gs = plan.scope_groups("attn")
+    assert len(gs) == 2                                  # 4 linears / 2
+    met = plan.scope_metrics()["attn"]
+    assert met["crossbars"] == 2
+    assert met["macs_per_pass"] == sum(met["chains"])
+
+
+# ---------------------------------------------------------- model hooks ----
+def test_full_block_forward_close_to_float():
+    """pim_block_mode=full quantizes every projection; the output must
+    stay close to the float model (8-bit per-layer error compounds but
+    stays small at smoke scale)."""
+    cfg = _pim_cfg()
+    from repro.models import build_model
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    toks = jnp.asarray(np.random.default_rng(0).integers(
+        3, cfg.vocab_size, (2, 8)))
+    lp, _ = m.forward(params, toks)
+    mf = build_model(dataclasses.replace(cfg, pim_linear_mode="off",
+                                         pim_block_mode="none"))
+    lf, _ = mf.forward(params, toks)
+    rel = float(jnp.linalg.norm(lp - lf) / jnp.linalg.norm(lf))
+    assert np.isfinite(rel) and rel < 0.08, rel
+
+
+def test_ffn_scope_leaves_attention_dense():
+    """pim_block_mode=ffn quantizes only the FFN projections: logits
+    differ from both the float model and the full-block model."""
+    cfg_ffn = _pim_cfg(block_mode="ffn")
+    cfg_full = _pim_cfg(block_mode="full")
+    from repro.models import build_model
+    params = build_model(cfg_ffn).init(jax.random.PRNGKey(1))
+    toks = jnp.asarray(np.random.default_rng(1).integers(
+        3, cfg_ffn.vocab_size, (1, 6)))
+    l_ffn, _ = build_model(cfg_ffn).forward(params, toks)
+    l_full, _ = build_model(cfg_full).forward(params, toks)
+    assert float(jnp.max(jnp.abs(l_ffn - l_full))) > 0
+
+
+def test_moe_block_runs_under_ffn_scope():
+    cfg = _pim_cfg("deepseek-moe-16b", block_mode="ffn")
+    from repro.models import build_model
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    toks = jnp.asarray(np.random.default_rng(2).integers(
+        3, cfg.vocab_size, (2, 4)))
+    logits, _ = m.forward(params, toks)
+    assert bool(jnp.isfinite(logits).all())
+
+
+# ------------------------------------------------------- quantized MoE ----
+def test_qragged_matmul_matches_dense_per_segment():
+    """The ragged zero-point correction == the dense correction applied
+    expert by expert (so the MoE path is bit-identical to running each
+    expert's GEMM through qmatmul_exact)."""
+    rng = np.random.default_rng(3)
+    e, d, f = 3, 8, 5
+    counts = jnp.asarray([4, 0, 2], jnp.int32)
+    xs = jnp.asarray(rng.standard_normal((6, d)), jnp.float32)
+    we = jnp.asarray(rng.standard_normal((e, d, f)), jnp.float32)
+    xq = quantize(xs, 8)
+    wq = quantize(we, 8)
+    got = qragged_matmul_exact(xq, wq, counts)
+    lo = 0
+    for ei, c in enumerate([4, 0, 2]):
+        if c == 0:
+            continue
+        seg = xq._replace(q=xq.q[lo:lo + c])
+        wseg = wq._replace(q=wq.q[ei])
+        want = qmatmul_exact(seg, wseg)
+        np.testing.assert_allclose(np.asarray(got[lo:lo + c]),
+                                   np.asarray(want), rtol=0, atol=1e-4)
+        lo += c
+
+
+def test_quantized_matmuls_exact_at_model_widths():
+    """Regression: the quantized GEMMs must accumulate in integers —
+    float32 accumulation silently drops low bits once the per-row dot
+    passes 2^24 (true for every real d_model here), breaking the
+    bit-identical-to-the-crossbar claim."""
+    rng = np.random.default_rng(11)
+    d = 4096
+    x = jnp.asarray(rng.standard_normal((4, d)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((d, 3)), jnp.float32)
+    xq = quantize(x, 8)
+    wq = quantize(w, 8, axis=0)
+    got = np.asarray(qmatmul_exact(xq, wq), np.float64)
+    xi = np.asarray(xq.q, np.int64) - xq.zero
+    wi = np.asarray(wq.q, np.int64) - wq.zero
+    want = ((xi @ wi).astype(np.float64)
+            * np.asarray(xq.scale, np.float64)
+            * np.asarray(wq.scale, np.float64))
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+    we = jnp.asarray(rng.standard_normal((2, d, 3)), jnp.float32)
+    counts = jnp.asarray([3, 1], jnp.int32)
+    wqe = quantize(we, 8)
+    got_r = np.asarray(qragged_matmul_exact(xq, wqe, counts), np.float64)
+    wie = np.asarray(wqe.q, np.int64) - wqe.zero
+    want_r = np.concatenate([xi[:3] @ wie[0], xi[3:] @ wie[1]]).astype(
+        np.float64) * np.asarray(xq.scale, np.float64) * float(wqe.scale)
+    np.testing.assert_allclose(got_r, want_r, rtol=1e-6)
+
+
+def test_engine_ragged_linear_modes():
+    eng = get_engine()
+    rng = np.random.default_rng(4)
+    xs = jnp.asarray(rng.standard_normal((5, 6)), jnp.float32)
+    we = jnp.asarray(rng.standard_normal((2, 6, 4)), jnp.float32)
+    counts = jnp.asarray([3, 2], jnp.int32)
+    yf = eng.ragged_linear(xs, we, counts, mode="float")
+    yp = eng.ragged_linear(xs, we, counts, mode="pim")
+    yk = eng.ragged_linear(xs, we, counts, mode="fake")
+    assert yf.shape == yp.shape == yk.shape == (5, 4)
+    rel = float(jnp.linalg.norm(yp - yf) / jnp.linalg.norm(yf))
+    assert rel < 0.05
+    with pytest.raises(ValueError):
+        eng.ragged_linear(xs, we, counts, mode="bogus")

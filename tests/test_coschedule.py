@@ -1,14 +1,17 @@
 """Multi-program co-scheduling: allocator/relocation invariants,
-K-program bit-parity vs sequential runs on every backend, co-scheduled
+K-program bit-parity vs sequential runs on every backend, heterogeneous
+compile_group parity, column-budget chain allocation, co-scheduled
 matvec, batched LM-head accounting, Pallas row_block autotune."""
 import numpy as np
 import pytest
 
-from repro.compiler import CapacityError, PartitionAllocator, coschedule
+from repro.compiler import (CapacityError, PartitionAllocator,
+                            column_budget_counts, coschedule)
 from repro.core.matvec import multpim_mac
 from repro.core.multpim import multpim_multiplier
-from repro.engine import (BatchedExecutable, Engine, autotune_row_block,
-                          get_engine, resolve_backend)
+from repro.engine import (BatchedExecutable, Engine, GroupedExecutable,
+                          GroupSpec, autotune_row_block, get_engine,
+                          resolve_backend)
 
 pytestmark = pytest.mark.core
 
@@ -192,6 +195,140 @@ def test_compile_batch_rejects_bad_shapes():
         bex.run([{"a": [1]}, {"a": [1]}])          # missing inputs
     with pytest.raises(CapacityError):
         eng.compile_batch("mac", 8, 100)           # > crossbar columns
+
+
+# ------------------------------------------------ heterogeneous groups ----
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_compile_group_heterogeneous_bit_parity(backend):
+    """compile_group([mac, multiply, ...]) == the same ops run
+    sequentially as single-op executables, bit-for-bit, on every
+    backend (the full-block serving acceptance check)."""
+    eng = get_engine()
+    gex = eng.compile_group([("mac", 8, 2), ("multpim", 4),
+                             GroupSpec("rime", 4, label="rime4")])
+    assert isinstance(gex, GroupedExecutable)
+    assert gex.k == 4
+    rng = np.random.default_rng(7)
+    rows = 6
+    macs = [_mac_bits(rng, rows, 8) for _ in range(2)]
+    mul = {"a": rng.integers(0, 16, rows), "b": rng.integers(0, 16, rows)}
+    rim = {"a": rng.integers(0, 16, rows), "b": rng.integers(0, 16, rows)}
+    got = gex.run(macs + [mul, rim], backend=backend)
+    want = ([eng.compile("mac", 8).run(m, backend=backend) for m in macs]
+            + [eng.compile("multpim", 4).run(mul, backend=backend),
+               eng.compile("rime", 4).run(rim, backend=backend)])
+    for i, (g, w) in enumerate(zip(got, want)):
+        for name, arr in w.items():
+            np.testing.assert_array_equal(
+                np.asarray(g[name], dtype=object),
+                np.asarray(arr, dtype=object),
+                err_msg=f"{backend} slot {i} output {name}")
+
+
+def test_compile_group_slots_use_their_own_input_names():
+    """Slot i's expected inputs are its *own* base program's — a MAC
+    slot wants the carry-save planes, a multiplier slot just a/b."""
+    eng = get_engine()
+    gex = eng.compile_group([("mac", 4), ("multpim", 4)])
+    rng = np.random.default_rng(0)
+    with pytest.raises(KeyError):
+        # multiplier operands fed to the MAC slot
+        gex.run([{"a": [1], "b": [1]},
+                 {"a": [1], "b": [1]}])
+    out = gex.run([_mac_bits(rng, 3, 4), {"a": [3, 5, 7], "b": [2, 2, 2]}])
+    assert [int(v) for v in out[1]["out"]] == [6, 10, 14]
+    assert {"lo", "s_hi", "c_hi"} <= set(out[0])
+
+
+def test_compile_group_op_cost_rows():
+    eng = get_engine()
+    gex = eng.compile_group([("mac", 8, 2), ("multpim", 4)])
+    rows = gex.op_costs()
+    assert [r["label"] for r in rows] == ["mac/n8", "mac/n8", "multpim/n4"]
+    assert all(r["fused_cycles"] == gex.n_cycles for r in rows)
+    assert all(r["own_cycles"] <= gex.n_cycles for r in rows)
+    assert (sum(r["cols"] for r in rows)
+            == gex.program.layout.n_cols)
+    assert gex.cost().programs == 3
+    # heterogeneous merge is never longer than the sum of the members
+    assert gex.n_cycles <= sum({r["label"]: r["own_cycles"]
+                                for r in rows}.values()) * 2
+
+
+def test_compile_group_memoizes_and_refreshes():
+    from repro.compiler import ProgramCache
+    cache = ProgramCache(use_disk=False)
+    eng = Engine(cache=cache)
+    g1 = eng.compile_group([("mac", 4), ("multpim", 4)])
+    g2 = eng.compile_group([("mac", 4), ("multpim", 4)])
+    assert g1.inner.packed is g2.inner.packed      # fused artifact reused
+    assert eng.compile_group([("multpim", 4), ("mac", 4)]
+                             ).inner.packed is not g1.inner.packed
+    cache.clear()                                  # base entries evicted
+    g3 = eng.compile_group([("mac", 4), ("multpim", 4)])
+    assert g3.inner.entry is not g1.inner.entry    # fused rebuilt too
+
+
+def test_compile_group_rejects_bad_specs():
+    eng = get_engine()
+    with pytest.raises(ValueError):
+        eng.compile_group([])
+    with pytest.raises(TypeError):
+        eng.compile_group(["mac"])                 # width required
+    with pytest.raises(ValueError):
+        eng.compile_group([("mac", 8, 0)])         # copies >= 1
+    with pytest.raises(CapacityError):
+        eng.compile_group([("mac", 8, 100)])       # > crossbar columns
+
+
+# ------------------------------------------- column-budget chain policy ----
+def test_column_budget_counts_packs_by_width_not_uniform_k():
+    """The heterogeneous-K policy: a wide and a narrow program packed
+    into one budget get different copy counts (narrow op fills the
+    leftover), and weights skew the split toward the heavier stream."""
+    wide = multpim_mac(8)       # ~107 cols
+    narrow = multpim_multiplier(4)
+    w, nw = wide.layout.n_cols, narrow.layout.n_cols
+    counts = column_budget_counts([wide, narrow], max_cols=w + 3 * nw,
+                                  weights=[1, 2])
+    assert counts[0] == 1 and counts[1] >= 2       # not uniform
+    used = counts[0] * w + counts[1] * nw
+    assert used <= w + 3 * nw
+    # equal budget, skewed weights -> skewed chains
+    even = column_budget_counts([narrow, narrow], max_cols=8 * nw)
+    assert even == [4, 4]
+    skew = column_budget_counts([narrow, narrow], max_cols=8 * nw,
+                                weights=[3, 1])
+    assert skew[0] > skew[1] and sum(skew) == 8
+
+
+def test_column_budget_counts_edge_cases():
+    prog = multpim_multiplier(4)
+    w = prog.layout.n_cols
+    assert column_budget_counts([prog], None) == [1]
+    assert column_budget_counts([prog], None, weights=[3.0]) == [3]
+    with pytest.raises(CapacityError):
+        column_budget_counts([prog, prog], max_cols=w)   # 1 each can't fit
+    with pytest.raises(ValueError):
+        column_budget_counts([], max_cols=100)
+    with pytest.raises(ValueError):
+        column_budget_counts([prog], max_cols=w, weights=[0.0])
+    with pytest.raises(ValueError):
+        column_budget_counts([prog], max_cols=w, weights=[1, 2])
+    # partition bound honored too
+    assert column_budget_counts(
+        [prog, prog], max_cols=100 * w,
+        max_partitions=2 * prog.n_partitions) == [1, 1]
+
+
+def test_engine_group_counts_respects_policy_cap():
+    eng = Engine(coschedule_k=2)
+    counts = eng.group_counts([("mac", 8), ("mac", 8)])
+    assert sum(counts) <= 2 * 2                    # coschedule_k per member
+    assert all(c >= 1 for c in counts)
+    # weights flow through to the split
+    a, b = eng.group_counts([("mac", 8), ("mac", 8)], weights=[10, 1])
+    assert a >= b
 
 
 # -------------------------------------------------- co-scheduled matvec ----

@@ -1,0 +1,114 @@
+"""Disk-cache failure paths: a corrupt/truncated spilled artifact must
+fall back to a clean recompile (never crash, never serve garbage), and
+an unwritable/unusable ``REPRO_CACHE_DIR`` must degrade to memory-only
+caching — compilation still succeeds, nothing raises."""
+import numpy as np
+import pytest
+
+from repro.compiler import ProgramCache
+from repro.compiler.diskcache import (cache_dir, disk_stats, load_entry,
+                                      store_entry)
+from repro.compiler.spec import OpSpec
+
+pytestmark = pytest.mark.core
+
+
+def _spill_one(tmp_path, monkeypatch, kind="multpim", n=4):
+    """Compile + verify one entry into a fresh disk cache dir; return
+    (spec, path-to-spilled-file)."""
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path / "cache"))
+    cache = ProgramCache(use_disk=True)
+    entry = cache.get_or_compile(kind, n)
+    assert entry.verified is not None and entry.verified.ok
+    files = list((tmp_path / "cache").glob("*.npz"))
+    assert len(files) == 1, "verified entry should have spilled"
+    return entry.key, files[0]
+
+
+def _run_ok(entry, a=3, b=5):
+    from repro.core.bits import from_bits, to_bits
+    from repro.core.executor import run_numpy
+    out = run_numpy(entry.program, {"a": to_bits(np.array([a]), entry.key.n),
+                                    "b": to_bits(np.array([b]), entry.key.n)})
+    assert int(from_bits(out["out"])[0]) == a * b
+
+
+def test_truncated_cache_file_falls_back_to_recompile(tmp_path, monkeypatch):
+    spec, path = _spill_one(tmp_path, monkeypatch)
+    path.write_bytes(path.read_bytes()[:17])          # truncate mid-header
+    assert load_entry(spec) is None                   # no crash
+    assert not path.exists(), "corrupt artifact should be deleted"
+    # a cold cache recompiles cleanly and re-spills
+    cold = ProgramCache(use_disk=True)
+    entry = cold.get_or_compile(spec.kind, spec.n)
+    assert cold.stats()["disk_hits"] == 0
+    assert cold.stats()["compiles"] == 1
+    _run_ok(entry)
+    assert list(path.parent.glob("*.npz")), "recompile should re-spill"
+
+
+def test_corrupt_cache_file_garbage_bytes(tmp_path, monkeypatch):
+    spec, path = _spill_one(tmp_path, monkeypatch)
+    path.write_bytes(b"\x00notanpz" * 64)             # wrong magic entirely
+    cold = ProgramCache(use_disk=True)
+    entry = cold.get_or_compile(spec.kind, spec.n)    # must not raise
+    assert cold.stats()["disk_hits"] == 0
+    _run_ok(entry)
+
+
+def test_bitflipped_payload_fails_selfcheck_and_recompiles(tmp_path,
+                                                          monkeypatch):
+    """A structurally-valid npz whose payload was tampered with must be
+    rejected (self-check/validate) rather than executed."""
+    spec, path = _spill_one(tmp_path, monkeypatch)
+    raw = bytearray(path.read_bytes())
+    raw[len(raw) // 2] ^= 0xFF                        # flip payload bits
+    path.write_bytes(bytes(raw))
+    cold = ProgramCache(use_disk=True)
+    entry = cold.get_or_compile(spec.kind, spec.n)    # never raises
+    _run_ok(entry)                                    # and still correct
+
+
+def test_readonly_cache_dir_degrades_to_memory_only(tmp_path, monkeypatch):
+    """REPRO_CACHE_DIR pointing at a directory we cannot write: spills
+    are skipped (best-effort), compiles still succeed, stats still
+    report. Simulated by failing the tempfile creation — chmod-based
+    read-only is a no-op when the suite runs as root."""
+    import tempfile
+    d = tmp_path / "ro-cache"
+    d.mkdir()
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(d))
+
+    def deny(*a, **k):
+        raise PermissionError("read-only filesystem")
+
+    monkeypatch.setattr(tempfile, "mkstemp", deny)
+    cache = ProgramCache(use_disk=True)
+    entry = cache.get_or_compile("multpim", 4)        # must not raise
+    assert entry.verified is not None
+    _run_ok(entry)
+    assert list(d.glob("*.npz")) == []                # nothing spilled
+    assert store_entry(entry.key, entry) is None      # explicit: graceful
+    st = disk_stats()
+    assert st["dir"] == str(d) and st["entries"] == 0
+
+
+def test_cache_dir_pointing_at_a_file_degrades(tmp_path, monkeypatch):
+    """REPRO_CACHE_DIR naming an existing *file*: mkdir fails, load
+    misses, store declines — compilation is unaffected."""
+    f = tmp_path / "not-a-dir"
+    f.write_text("occupied")
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(f))
+    cache = ProgramCache(use_disk=True)
+    entry = cache.get_or_compile("multpim", 4)
+    _run_ok(entry)
+    assert store_entry(entry.key, entry) is None
+    assert load_entry(entry.key) is None
+
+
+def test_disabled_cache_dir_values(monkeypatch):
+    for value in ("0", "off", "none", "OFF "):
+        monkeypatch.setenv("REPRO_CACHE_DIR", value)
+        assert cache_dir() is None
+        assert load_entry(OpSpec.make("multpim", 4, None, None)) is None
+        assert disk_stats()["entries"] == 0

@@ -4,7 +4,6 @@ import math
 import numpy as np
 import pytest
 
-from repro.core.bits import to_bits
 from repro.core.executor import run_numpy
 from repro.core.isa import Gate, Op
 from repro.core.multpim import broadcast_schedule

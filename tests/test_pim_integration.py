@@ -9,8 +9,8 @@ import numpy as np
 import pytest
 
 from repro.core.matvec import matvec as pim_matvec
-from repro.pim import (PIMLinearSpec, gemms_from_config, pim_linear_apply,
-                       plan_model, quantize)
+from repro.pim import (PIMLinearSpec, gemms_from_config,
+                       pim_linear_apply, plan_model)
 
 pytestmark = pytest.mark.pim
 

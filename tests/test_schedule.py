@@ -6,7 +6,6 @@ import pytest
 
 from repro.compiler import (PassConfig, build_op_graph, critical_path,
                             list_schedule, optimize, verify_or_raise)
-from repro.compiler.schedule import ScheduleNode
 from repro.core.baselines import hajali_multiplier, rime_multiplier
 from repro.core.bits import from_bits, to_bits
 from repro.core.executor import run_numpy
