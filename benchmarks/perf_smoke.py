@@ -1,15 +1,19 @@
 """Perf smoke gate: fail CI when cycles-per-MAC (or any tracked cycle
 count) regresses more than 5% against the checked-in baseline.
 
-The metrics are *deterministic compiler outputs* (cycle counts from the
-opt / sim_throughput benchmark paths at small N), not wall-clock, so the
-gate is immune to runner noise while still catching real scheduling or
-co-scheduling regressions.
+The gated metrics are *deterministic compiler outputs* (cycle counts
+from the opt / sim_throughput benchmark paths at small N), not
+wall-clock, so the gate is immune to runner noise while still catching
+real scheduling or co-scheduling regressions. Wall-clock throughput of
+the bit-plane packed backends is additionally measured and printed as
+``info_*`` metrics — **informational only**: they are excluded from the
+baseline and never gate (wall-clock gating needs at least two recorded
+baselines on comparable runners before a tolerance is defensible).
 
   PYTHONPATH=src python -m benchmarks.perf_smoke                 # gate
   PYTHONPATH=src python -m benchmarks.perf_smoke --write-baseline
 
-Baseline lives at ``benchmarks/baseline_pr4.json``; regenerate it (and
+Baseline lives at ``benchmarks/baseline_pr5.json``; regenerate it (and
 review the diff!) whenever a change legitimately improves or trades off
 these numbers.
 """
@@ -21,8 +25,9 @@ import os
 import sys
 
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__),
-                                "baseline_pr4.json")
+                                "baseline_pr5.json")
 TOLERANCE = 0.05          # >5% regression fails
+INFO_PREFIX = "info_"     # reported, never gated
 
 
 def collect_metrics(n: int = 8, k: int = 4, n_elems: int = 8) -> dict:
@@ -61,6 +66,21 @@ def collect_metrics(n: int = 8, k: int = 4, n_elems: int = 8) -> dict:
     cfg = dataclasses.replace(get_config("gemma2-9b"),
                               pim_linear_mode="pim", pim_block_mode="full")
     scope = plan_block(cfg, eng).scope_metrics()
+
+    # Wall-clock throughput, packed vs unpacked (informational — see
+    # module docstring): states/sec through Executable.run at a serve-
+    # sized batch, lower-is-better us-per-1k-states so the metric shape
+    # matches the cycle metrics if it is ever promoted to gating. The
+    # timing loop is benchmarks.tables.time_backends — the same
+    # methodology as the `throughput` section, just a narrower spec
+    # list and one row count, so smoke stays fast.
+    from benchmarks.tables import time_backends
+    exe = eng.compile("multpim", 16)
+    rows = 1024
+    tbatch = {"a": rng.integers(0, 1 << 16, rows),
+              "b": rng.integers(0, 1 << 16, rows)}
+    wall = time_backends(exe, tbatch, ("jax", "jax:pack=true",
+                                       "numpy:pack=true"))
     return {
         # lower is better for every metric here
         f"cycles_per_mac_seq_n{n}": cyc_seq / n_elems,
@@ -76,6 +96,14 @@ def collect_metrics(n: int = 8, k: int = 4, n_elems: int = 8) -> dict:
         f"block_attn_cycles_per_mac_n{n}": scope["attn"]["cycles_per_mac"],
         f"block_full_cycles_per_token_n{n}": float(
             sum(m["cycles_per_token"] for m in scope.values())),
+        # informational wall-clock (never gated, never in the baseline)
+        "info_us_per_1k_states_jax": wall["jax"] * 1e6 / (rows / 1e3),
+        "info_us_per_1k_states_jax_packed":
+            wall["jax:pack=true"] * 1e6 / (rows / 1e3),
+        "info_us_per_1k_states_numpy_packed":
+            wall["numpy:pack=true"] * 1e6 / (rows / 1e3),
+        "info_packed_speedup_vs_jax":
+            wall["jax"] / wall["jax:pack=true"],
     }
 
 
@@ -91,10 +119,12 @@ def main() -> None:
         print(f"{name} = {val:.2f}")
 
     if args.write_baseline:
+        gated = {k: round(v, 4) for k, v in metrics.items()
+                 if not k.startswith(INFO_PREFIX)}
         with open(args.baseline, "w") as f:
-            json.dump({k: round(v, 4) for k, v in metrics.items()}, f,
-                      indent=1, sort_keys=True)
-        print(f"wrote baseline {args.baseline}")
+            json.dump(gated, f, indent=1, sort_keys=True)
+        print(f"wrote baseline {args.baseline} "
+              f"({len(gated)} gated metrics)")
         return
 
     with open(args.baseline) as f:
@@ -112,7 +142,8 @@ def main() -> None:
                 f"(+{100 * (got / base - 1):.1f}%, limit "
                 f"+{100 * args.tolerance:.0f}%)")
     for name in sorted(set(metrics) - set(baseline)):
-        print(f"note: new metric '{name}' not in baseline")
+        if not name.startswith(INFO_PREFIX):
+            print(f"note: new metric '{name}' not in baseline")
     if failures:
         print("PERF SMOKE FAILED:")
         for f in failures:

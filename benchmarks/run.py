@@ -2,16 +2,16 @@
 
 Prints ``name,us_per_call,derived`` CSV (the harness contract) and, so
 the perf trajectory is tracked across PRs, writes a machine-readable
-JSON (``--json``, default ``BENCH_pr4.json``) mapping each section to
+JSON (``--json``, default ``BENCH_pr5.json``) mapping each section to
 its rows::
 
     {"sections": {"table1": [[name, us_per_call, derived], ...], ...},
      "errors": {"section": "repr(exc)"}}
 
   PYTHONPATH=src python -m benchmarks.run [--section table1|table2|table3|
-                                           fa|opt|sim|block_pim|roofline|
-                                           all|sec1,sec2,...]
-                                          [--json BENCH_pr4.json|off]
+                                           fa|opt|sim|throughput|block_pim|
+                                           roofline|all|sec1,sec2,...]
+                                          [--json BENCH_pr5.json|off]
 """
 from __future__ import annotations
 
@@ -24,7 +24,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--section", default="all")
     ap.add_argument("--dryrun-json", default="dryrun_results.json")
-    ap.add_argument("--json", default="BENCH_pr4.json",
+    ap.add_argument("--json", default="BENCH_pr5.json",
                     help="machine-readable output path ('off' disables)")
     args = ap.parse_args()
 
@@ -38,6 +38,7 @@ def main() -> None:
         "fa": tables.fa_comparison,
         "opt": tables.opt_pipeline,
         "sim": tables.sim_throughput,
+        "throughput": tables.throughput,
         "pim_plan": tables.pim_plan_sweep,
         "block_pim": tables.block_pim_plan,
         "energy": tables.energy_table,

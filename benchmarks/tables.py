@@ -232,6 +232,71 @@ def fa_comparison() -> List[Row]:
     return rows
 
 
+def time_backends(exe, batch, specs) -> dict:
+    """Warm-then-time one ``Executable.run`` per backend spec ->
+    ``{spec: seconds}``. The one timing methodology shared by the
+    ``throughput`` section and the perf-smoke ``info_*`` metrics, so the
+    two can never drift apart."""
+    out = {}
+    for spec in specs:
+        exe.run(batch, backend=spec)          # warm (jit compile)
+        t0 = time.perf_counter()
+        exe.run(batch, backend=spec)
+        out[spec] = time.perf_counter() - t0
+    return out
+
+
+def throughput(rows_list=(1024, 4096), n: int = 16) -> List[Row]:
+    """Wall-clock throughput, bit-plane packed vs unpacked: states/sec
+    through ``Executable.run`` (marshalling included) on the numpy and
+    jax backends, and serve-style cycles-per-MAC *wall time* through the
+    co-scheduled MAC group. ``speedup`` on every packed row is measured
+    against the **unpacked jax backend** at the same row count — the
+    PR-5 acceptance metric (>= 5x at rows >= 1024).
+
+    (Pallas stays out of the wall-clock rows: ``interpret=True`` on CPU
+    measures the emulator, not the kernel; its packed parity is covered
+    by the test suite and its real-TPU timing is an open ROADMAP item.)
+    """
+    from repro.engine import get_engine
+    eng = get_engine()
+    exe = eng.compile("multpim", n)
+    rng = np.random.default_rng(5)
+    rows: List[Row] = []
+    for r_count in rows_list:
+        batch = {"a": rng.integers(0, 1 << n, r_count),
+                 "b": rng.integers(0, 1 << n, r_count)}
+        timings = time_backends(exe, batch, ("jax", "numpy",
+                                             "jax:pack=true",
+                                             "numpy:pack=true"))
+        base = timings["jax"]
+        for spec, dt in timings.items():
+            rows.append((f"throughput/{spec}/N={n},rows={r_count}",
+                         dt * 1e6,
+                         f"states_per_s={r_count / dt:.0f};"
+                         f"speedup_vs_jax={base / dt:.2f}x;"
+                         f"pack={'pack=true' in spec}"))
+    # Serve decode traffic: wall time per MAC through the co-scheduled
+    # K-MAC group (what the PIM-mode LM head / block projections pay).
+    n_mac, r_mac = 8, 1024
+    k = eng.effective_coschedule_k("mac", n_mac)
+    bex = eng.compile_batch("mac", n_mac, max(k, 1))
+    zeros = np.zeros(r_mac, dtype=object)
+    group = [eng._mac_inputs(n_mac, rng.integers(0, 1 << (n_mac - 2), r_mac),
+                             rng.integers(0, 1 << (n_mac - 2), r_mac),
+                             zeros, zeros) for _ in range(bex.k)]
+    mac_timings = time_backends(bex, group, ("jax", "jax:pack=true"))
+    mac_base = mac_timings["jax"]
+    for spec, dt in mac_timings.items():
+        us_per_mac = dt * 1e6 / (bex.k * r_mac)
+        rows.append((f"throughput/mac-wall/{spec}/N={n_mac},K={bex.k},"
+                     f"rows={r_mac}", dt * 1e6,
+                     f"us_per_mac={us_per_mac:.3f};"
+                     f"macs_per_s={bex.k * r_mac / dt:.0f};"
+                     f"speedup_vs_jax={mac_base / dt:.2f}x"))
+    return rows
+
+
 def sim_throughput() -> List[Row]:
     """Simulator throughput: rows/s across executors (numpy / jax scan /
     Pallas interpret) — the reproduction's own perf."""

@@ -12,6 +12,11 @@ Sits between the hand-written program builders (``core/multpim.py``,
 * :mod:`.schedule` — critical-path list scheduler over the hazard DAG
   (``PassConfig(scheduler="list")``), never worse than greedy
   compaction and strictly better on serial-movement schedules;
+* :mod:`.macrocycle` — macro-cycle fusion for the bit-plane packed
+  executors: runs of consecutive cycles (always static-column by
+  construction of the packed tables) fuse into one kernel step, so the
+  JAX scan / Pallas grid dispatch ``O(T/factor)`` steps
+  (:func:`fuse_macrocycles`);
 * :mod:`.coschedule` — multi-program co-scheduling: a partition-range
   allocator relocates K independent programs into disjoint partition
   and column ranges of one wide crossbar and merges their cycle
@@ -40,6 +45,8 @@ from .coschedule import (CapacityError, PartitionAllocator, Placement,
 from .depgraph import DepGraph
 from .diskcache import cache_dir, clear_disk_cache, disk_stats
 from .liveness import dead_sets, live_segments
+from .macrocycle import (DEFAULT_MACRO_FACTOR, MacroTables,
+                         fuse_macrocycles)
 from .passes import OptStats, PassConfig, fuse_ops, optimize
 from .schedule import build_op_graph, critical_path, list_schedule
 from .spec import PIPELINE_VERSION, OpSpec
@@ -51,6 +58,7 @@ __all__ = [
     "coschedule", "relocate", "PartitionAllocator", "Placement",
     "CapacityError", "column_budget_counts",
     "DepGraph", "live_segments", "dead_sets",
+    "fuse_macrocycles", "MacroTables", "DEFAULT_MACRO_FACTOR",
     "verify_equivalence", "verify_or_raise", "VerifyReport",
     "compile_cached", "register_builder", "CompiledEntry", "ProgramCache",
     "cache_stats", "clear_cache",

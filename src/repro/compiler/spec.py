@@ -33,7 +33,10 @@ __all__ = ["OpSpec", "PIPELINE_VERSION", "freeze_flags"]
 # Version of the whole compile pipeline (builders + passes + packer).
 # Bump whenever a change makes previously-spilled disk artifacts stale.
 # "3": PassConfig gained fuse/scheduler fields (pass_key shape changed).
-PIPELINE_VERSION = "3"
+# 4: list scheduler gained the stabbed (ALAP init batching) strategy —
+# cached "list" schedules from older pipelines are no longer what the
+# scheduler would produce.
+PIPELINE_VERSION = "4"
 
 
 def _freeze(value: Any) -> Any:

@@ -24,7 +24,31 @@ import numpy as np
 from .isa import Gate
 from .program import Program
 
-__all__ = ["run_numpy", "PackedProgram", "pack_program", "run_jax"]
+__all__ = ["run_numpy", "PackedProgram", "pack_program", "run_jax",
+           "gate_eval_packed"]
+
+
+def gate_eval_packed(xp, gid, x0, x1, x2):
+    """Word-wide bitwise gate evaluation over bit-plane packed rows,
+    shared by the numpy and jnp packed interpreters (``xp`` is the array
+    namespace — ``numpy`` or ``jax.numpy``).
+
+    ``gid`` broadcasts against the ``(W, M)`` packed-word operands
+    ``x0/x1/x2``. Every gate is a pure lanewise bitwise identity — MIN3
+    (minority-of-3) is the complement of the 3-input majority
+    ``(x0&x1)|(x0&x2)|(x1&x2)`` — so one expression serves all 32/64
+    packed rows of a word at once. NOP (and any unknown id) yields
+    all-ones, the AND-write identity.
+    """
+    full = ~x0.dtype.type(0)
+    maj = (x0 & x1) | (x0 & x2) | (x1 & x2)
+    out = xp.where(gid == int(Gate.NOT), ~x0,
+          xp.where(gid == int(Gate.NOR), ~(x0 | x1),
+          xp.where(gid == int(Gate.MIN3), ~maj,
+          xp.where(gid == int(Gate.NAND), ~(x0 & x1),
+          xp.where(gid == int(Gate.OR), x0 | x1,
+          xp.where(gid == int(Gate.COPY), x0, full))))))
+    return out.astype(x0.dtype)
 
 
 # ---------------------------------------------------------------- numpy ----

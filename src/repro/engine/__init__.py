@@ -37,9 +37,9 @@ Legacy entry points (``repro.core.matvec.matvec``,
 ``repro.pim.pim_linear_apply``) remain as thin deprecation shims that
 delegate here — new code should talk to the Engine.
 """
-from .backends import (Backend, JaxBackend, NumpyBackend, PallasBackend,
-                       autotune_row_block, backend_names, register_backend,
-                       resolve_backend)
+from .backends import (DEFAULT_MACRO, Backend, JaxBackend, NumpyBackend,
+                       PallasBackend, autotune_row_block, backend_names,
+                       register_backend, resolve_backend)
 from .engine import (DEFAULT_COSCHEDULE_K, OP_KINDS, Engine, GroupSpec,
                      get_engine)
 from .executable import (BatchedExecutable, ExecCost, Executable,
@@ -55,5 +55,5 @@ __all__ = [
     "ExecCost", "OpSpec",
     "Backend", "NumpyBackend", "JaxBackend", "PallasBackend",
     "register_backend", "resolve_backend", "backend_names",
-    "autotune_row_block",
+    "autotune_row_block", "DEFAULT_MACRO",
 ]

@@ -18,9 +18,24 @@ Stock registry entries:
   ``interpret=True`` on CPU, ``interpret=False`` on real TPU, with a
   ``row_block`` row-tiling policy (rows are the SIMD batch axis).
 
+Every stock backend additionally carries a **bit-plane packing policy**
+(``pack=True``, spec-selectable as e.g. ``"jax:pack=true"``): crossbar
+rows — the SIMD batch axis — are packed 64-per-``uint64`` word (numpy)
+or 32-per-``uint32`` (JAX/Pallas, which run 32-bit), and every gate
+evaluates word-wide with pure bitwise ops
+(:func:`repro.core.executor.gate_eval_packed`) instead of one uint8 lane
+per cell. Packing is internal to ``run_state`` — the ``(rows, C)``
+{0,1} contract is unchanged and bit-parity with the unpacked
+interpreters is asserted by the test suite — so ``Executable``,
+``BatchedExecutable`` and ``GroupedExecutable`` all benefit without API
+changes. The JAX/Pallas packed paths also macro-fuse consecutive cycles
+(``macro=``, :mod:`repro.compiler.macrocycle`) so the scan/grid executes
+``O(T/factor)`` dispatches instead of one per cycle.
+
 ``resolve_backend`` accepts a Backend instance, a registered name, or a
 ``"name:key=val,key=val"`` spec string — e.g. ``"pallas:interpret=false,
-row_block=512"`` — so CLI flags map directly onto backend policy.
+row_block=512"`` or ``"jax:pack=true,macro=8"`` — so CLI flags map
+directly onto backend policy.
 """
 from __future__ import annotations
 
@@ -29,12 +44,15 @@ from typing import Callable, Dict, Optional, Protocol, Union, runtime_checkable
 
 import numpy as np
 
-from repro.core.executor import PackedProgram
+from repro.compiler.macrocycle import DEFAULT_MACRO_FACTOR as DEFAULT_MACRO
+from repro.core.bits import pack_rows, unpack_rows
+from repro.core.executor import PackedProgram, gate_eval_packed
 from repro.core.isa import Gate
 
 __all__ = ["Backend", "NumpyBackend", "JaxBackend", "PallasBackend",
            "register_backend", "resolve_backend", "backend_names",
-           "autotune_row_block", "DEFAULT_ROW_BLOCK", "MAX_ROW_BLOCK"]
+           "autotune_row_block", "DEFAULT_ROW_BLOCK", "MAX_ROW_BLOCK",
+           "DEFAULT_MACRO"]
 
 
 @runtime_checkable
@@ -53,11 +71,21 @@ class Backend(Protocol):
 # ---------------------------------------------------------------- numpy ----
 @dataclass(frozen=True)
 class NumpyBackend:
-    """Reference interpreter over the packed tables (no JAX import)."""
+    """Reference interpreter over the packed tables (no JAX import).
 
+    ``pack=True`` switches to the bit-plane packed interpreter: 64
+    crossbar rows per ``uint64`` word, word-wide bitwise gate
+    evaluation, ``np.bitwise_and.at`` AND-scatter. (Macro-cycle fusion
+    is a dispatch-count optimization and does not apply to the eager
+    numpy loop.)
+    """
+
+    pack: bool = False
     name: str = "numpy"
 
     def run_state(self, packed: PackedProgram, state: np.ndarray) -> np.ndarray:
+        if self.pack:
+            return self._run_packed(packed, state)
         st = np.asarray(state, dtype=np.uint8).copy()
         gate_id, in_cols, out_col = packed.gate_id, packed.in_cols, packed.out_col
         for t in range(packed.n_cycles):
@@ -85,18 +113,61 @@ class NumpyBackend:
             np.minimum.at(st, (slice(None), ocs), res)
         return st
 
+    def _run_packed(self, packed: PackedProgram,
+                    state: np.ndarray) -> np.ndarray:
+        state = np.asarray(state, dtype=np.uint8)
+        rows = state.shape[0]
+        st = pack_rows(state, 64)
+        full = ~np.uint64(0)
+        gate_id, in_cols, out_col = (packed.gate_id, packed.in_cols,
+                                     packed.out_col)
+        for t in range(packed.n_cycles):
+            imask = packed.init_mask[t]
+            if imask.any():
+                st[:, imask] = full
+                continue
+            gid, ics, ocs = gate_id[t], in_cols[t], out_col[t]
+            # Gathers before the write: ops in a cycle are simultaneous.
+            res = gate_eval_packed(np, gid[None, :], st[:, ics[:, 0]],
+                                   st[:, ics[:, 1]], st[:, ics[:, 2]])
+            # Exact AND accumulation, duplicate scratch writes included.
+            np.bitwise_and.at(st, (slice(None), ocs), res)
+        return unpack_rows(st, rows)
+
 
 # ------------------------------------------------------------------ JAX ----
+def _macro_factor(macro: Optional[int]) -> int:
+    """Shared macro-fusion policy for the packed scan/grid paths (the
+    only callers): an explicit ``macro`` wins, else ``DEFAULT_MACRO``."""
+    return max(1, int(macro)) if macro is not None else DEFAULT_MACRO
+
+
 @dataclass(frozen=True)
 class JaxBackend:
-    """Jitted ``lax.scan`` over the packed tables."""
+    """Jitted ``lax.scan`` over the packed tables.
 
+    ``pack=True`` runs the bit-plane packed scan (32 rows per ``uint32``
+    word, :func:`repro.kernels.ref.crossbar_run_ref_packed`) with
+    ``macro``-deep macro-cycle fusion (``None`` = the stock
+    ``DEFAULT_MACRO`` when packed, no fusion otherwise).
+    """
+
+    pack: bool = False
+    macro: Optional[int] = None
     name: str = "jax"
 
     def run_state(self, packed: PackedProgram, state: np.ndarray) -> np.ndarray:
         import jax.numpy as jnp
 
-        from repro.kernels.ref import crossbar_run_ref
+        from repro.kernels.ref import (crossbar_run_ref,
+                                       crossbar_run_ref_packed)
+        if self.pack:
+            rows = state.shape[0]
+            words = pack_rows(np.asarray(state, dtype=np.uint8), 32)
+            final = crossbar_run_ref_packed(
+                jnp.asarray(words), packed,
+                macro=_macro_factor(self.macro))
+            return unpack_rows(np.asarray(final), rows)
         final = crossbar_run_ref(jnp.asarray(state, dtype=jnp.uint8), packed)
         return np.asarray(final)
 
@@ -123,21 +194,40 @@ class PallasBackend:
 
     ``row_block`` is the row-tiling policy: crossbar rows (the SIMD batch
     axis) are processed in VMEM-resident tiles of this many rows.
-    ``None`` (the default) means *autotune*: the engine picks a block
-    from the batch shape at the Executable's first ``run`` (see
-    :func:`autotune_row_block`) and caches the choice on the Engine;
-    an explicit value (e.g. ``"pallas:row_block=512"``) is always
-    honored.
+    ``None`` (the default) means *autotune*: each ``run`` picks the
+    block from its batch's rows-bucket (the pow2 tile class of
+    :func:`autotune_row_block`, reported in ``cost().row_block``), so a
+    small warmup batch never pins a tile for later wide batches; an
+    explicit value (e.g. ``"pallas:row_block=512"``) is always honored.
+
+    ``pack=True`` runs the bit-plane packed kernel
+    (:func:`repro.kernels.crossbar_step.crossbar_run_pallas_packed`):
+    rows are packed 32-per-``uint32`` word, so the row tile becomes a
+    *word* tile of ``row_block / 32`` words (floor 8, the int32 sublane
+    tile) and gates evaluate bitwise on the VPU. ``macro`` is the
+    macro-cycle fusion depth, as on :class:`JaxBackend`.
     """
 
     interpret: bool = True
     row_block: Optional[int] = None
+    pack: bool = False
+    macro: Optional[int] = None
     name: str = "pallas"
 
     def run_state(self, packed: PackedProgram, state: np.ndarray) -> np.ndarray:
         import jax.numpy as jnp
 
-        from repro.kernels.crossbar_step import crossbar_run_pallas
+        from repro.kernels.crossbar_step import (crossbar_run_pallas,
+                                                 crossbar_run_pallas_packed)
+        if self.pack:
+            rows = state.shape[0]
+            words = pack_rows(np.asarray(state, dtype=np.uint8), 32)
+            word_block = max(8, (self.row_block or DEFAULT_ROW_BLOCK) // 32)
+            final = crossbar_run_pallas_packed(
+                jnp.asarray(words), packed,
+                macro=_macro_factor(self.macro),
+                word_block=word_block, interpret=self.interpret)
+            return unpack_rows(np.asarray(final), rows)
         final = crossbar_run_pallas(jnp.asarray(state, dtype=jnp.uint8),
                                     packed,
                                     row_block=self.row_block
@@ -189,4 +279,11 @@ def resolve_backend(spec: Union[None, str, Backend],
         for item in opts.split(","):
             k, _, v = item.partition("=")
             kwargs[k.strip()] = _parse_value(v.strip())
-    return _REGISTRY[name](**kwargs)
+    try:
+        return _REGISTRY[name](**kwargs)
+    except TypeError as e:
+        raise ValueError(
+            f"backend spec '{spec}': {e} — options the '{name}' backend "
+            f"accepts are its constructor fields "
+            f"(e.g. numpy: pack; jax: pack, macro; pallas: interpret, "
+            f"row_block, pack, macro)") from e

@@ -120,7 +120,6 @@ class Engine:
         self.crossbar = crossbar
         self.pass_config = pass_config
         self.coschedule_k = coschedule_k
-        self.tuned_row_block: Optional[int] = None  # Pallas autotune cache
         self.runs = 0
         self._batch_entries: Dict[Tuple, Tuple] = {}
         self._batch_lock = threading.Lock()

@@ -42,8 +42,10 @@ class ExecCost:
     ``programs`` is the number of co-scheduled programs the pass serves
     (1 for a plain Executable), so ``cycles_per_program`` is the
     cycles-per-MAC figure for batched MAC groups. ``row_block`` reports
-    the Pallas row-tiling in effect (explicit or engine-autotuned;
-    ``None`` for non-Pallas backends or before the first run tunes it).
+    the Pallas row-tiling in effect (explicit backend policy, or the
+    autotuned choice this executable last ran with; ``None`` for
+    non-Pallas backends or before the first run tunes it). ``pack``
+    reports the backend's bit-plane packing policy.
     """
 
     cycles: int
@@ -53,6 +55,7 @@ class ExecCost:
     energy_uj: float
     programs: int = 1
     row_block: Optional[int] = None
+    pack: bool = False
 
     @property
     def cycles_per_program(self) -> float:
@@ -105,13 +108,13 @@ class Executable:
     # ----------------------------------------------------------- cost ----
     def _effective_row_block(self) -> Optional[int]:
         """Pallas row tiling in effect: explicit backend policy, else the
-        engine's autotuned choice (None before the first run tunes it,
-        or on non-Pallas backends)."""
+        autotuned choice this executable last ran with (None before the
+        first run tunes it, or on non-Pallas backends)."""
         if not isinstance(self.backend, PallasBackend):
             return None
         if self.backend.row_block is not None:
             return self.backend.row_block
-        return getattr(self.engine, "tuned_row_block", None)
+        return getattr(self, "_last_row_block", None)
 
     def cost(self) -> ExecCost:
         """Cycles/area/latency/energy from the Section V cost model."""
@@ -123,7 +126,8 @@ class Executable:
             partitions=prog.n_partitions,
             latency_us=prog.n_cycles * self.crossbar.cycle_ns / 1e3,
             energy_uj=gates * self.crossbar.energy_pj_per_gate / 1e6,
-            row_block=self._effective_row_block())
+            row_block=self._effective_row_block(),
+            pack=getattr(self.backend, "pack", False))
 
     # --------------------------------------------------------- verify ----
     def verify(self) -> "VerifyReport":
@@ -159,19 +163,18 @@ class Executable:
             f"(rows, {width}) bit planes, got shape {arr.shape}")
 
     def _autotuned(self, bk: Backend, rows: int) -> Backend:
-        """Per-Engine Pallas row-block autotune: an unpinned
-        (``row_block=None``) Pallas backend gets the block chosen from
-        the *first* batch shape this Engine runs; the choice is cached
-        on the Engine so every later executable (and its jit cache)
-        reuses one tiling."""
+        """Pallas row-block autotune: an unpinned (``row_block=None``)
+        Pallas backend gets the block chosen from *this batch's* shape —
+        the pow2 row-tile class of
+        :func:`repro.engine.backends.autotune_row_block`, i.e. keyed per
+        rows-bucket rather than first-batch-wins — so a small warmup
+        batch can no longer pin a bad tile for later wide batches, while
+        repeat traffic of the same shape class still hits one jit cache
+        (same block -> same traced shapes)."""
         if not isinstance(bk, PallasBackend) or bk.row_block is not None:
             return bk
-        eng = self.engine
-        rb = getattr(eng, "tuned_row_block", None)
-        if rb is None:
-            rb = autotune_row_block(rows)
-            if eng is not None:
-                eng.tuned_row_block = rb
+        rb = autotune_row_block(rows)
+        self._last_row_block = rb
         return _dc_replace(bk, row_block=rb)
 
     def run(self, batch: Mapping[str, Union[np.ndarray, list]], *,

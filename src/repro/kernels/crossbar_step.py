@@ -33,10 +33,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from repro.core.executor import PackedProgram
+from repro.core.executor import PackedProgram, gate_eval_packed
 from repro.core.isa import Gate
 
-__all__ = ["crossbar_run_pallas"]
+__all__ = ["crossbar_run_pallas", "crossbar_run_pallas_packed"]
 
 
 def _gate_eval(gid, x0, x1, x2):
@@ -110,6 +110,130 @@ def _run(state, gate_id, in0, in1, in2, out_col, init_mask, *,
         out_shape=jax.ShapeDtypeStruct((rows, c), jnp.float32),
         interpret=interpret,
     )(state, gate_id, in0, in1, in2, out_col, init_mask)
+
+
+# ------------------------------------------------ bit-plane packed ----
+#
+# The packed variant trades the one-hot-matmul mapping for word-wide
+# bitwise execution: crossbar rows are packed 32-per-uint32 word
+# (repro.core.bits.pack_rows), the state tile is (Wb, C) int32 words,
+# and every gate is a pure VPU bitwise op (NOR = ~(x0|x1), MIN3 =
+# ~majority3). Gather/scatter columns come from the static macro-fused
+# tables, so operand access is lax.dynamic_slice along the lane axis
+# (scalar column index — no dynamic per-lane gather needed), and the
+# grid executes ceil(T/macro) loop steps with the macro factor unrolled
+# inside. Scatter is a read-modify-write AND of the single output lane,
+# applied sequentially per op — exact AND accumulation even for the
+# duplicate scratch-column writes of NOP padding.
+
+
+def _packed_kernel(state_ref, gate_ref, in0_ref, in1_ref, in2_ref,
+                   out_ref, init_ref, o_ref, *, n_macro: int, factor: int,
+                   max_ops: int):
+    st = state_ref[...]
+
+    def body(t, st):
+        for j in range(factor):
+            gid = gate_ref[t, j]
+            i0, i1, i2 = in0_ref[t, j], in1_ref[t, j], in2_ref[t, j]
+            ocs = out_ref[t, j]
+            st = st | init_ref[t, j][None, :]
+            # Gather every operand lane before any write (ops within a
+            # cycle observe pre-cycle state).
+            cols = []
+            for m in range(max_ops):
+                x0 = jax.lax.dynamic_index_in_dim(st, i0[m], 1)
+                x1 = jax.lax.dynamic_index_in_dim(st, i1[m], 1)
+                x2 = jax.lax.dynamic_index_in_dim(st, i2[m], 1)
+                cols.append((x0, x1, x2))
+            for m in range(max_ops):
+                x0, x1, x2 = cols[m]
+                res = gate_eval_packed(jnp, gid[m], x0, x1, x2)
+                old = jax.lax.dynamic_index_in_dim(st, ocs[m], 1)
+                st = jax.lax.dynamic_update_slice_in_dim(
+                    st, old & res, ocs[m], 1)
+        return st
+
+    o_ref[...] = jax.lax.fori_loop(0, n_macro, body, st)
+
+
+@functools.partial(jax.jit, static_argnames=("word_block", "interpret",
+                                             "tm", "k", "m", "c"))
+def _run_packed(words, gate_id, in0, in1, in2, out_col, init_words, *,
+                word_block: int, interpret: bool, tm: int, k: int, m: int,
+                c: int):
+    n_words = words.shape[0]
+    grid = (n_words // word_block,)
+    kernel = functools.partial(_packed_kernel, n_macro=tm, factor=k,
+                               max_ops=m)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((word_block, c), lambda i: (i, 0)),
+            pl.BlockSpec((tm, k, m), lambda i: (0, 0, 0)),
+            pl.BlockSpec((tm, k, m), lambda i: (0, 0, 0)),
+            pl.BlockSpec((tm, k, m), lambda i: (0, 0, 0)),
+            pl.BlockSpec((tm, k, m), lambda i: (0, 0, 0)),
+            pl.BlockSpec((tm, k, m), lambda i: (0, 0, 0)),
+            pl.BlockSpec((tm, k, c), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((word_block, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_words, c), jnp.int32),
+        interpret=interpret,
+    )(words, gate_id, in0, in1, in2, out_col, init_words)
+
+
+def crossbar_run_pallas_packed(state_words: jnp.ndarray,
+                               packed: PackedProgram, *,
+                               macro: int = 1,
+                               word_block: int = 8,
+                               interpret: bool = True) -> jnp.ndarray:
+    """Run a packed PIM program on bit-plane packed ``(W, C)`` uint32
+    words (:func:`repro.core.bits.pack_rows` with ``word_bits=32``).
+
+    Words are padded to ``word_block`` (the int32 sublane tile is 8) and
+    columns to a 128-lane multiple; returns the final ``(W, C)`` uint32
+    words. ``macro`` is the macro-cycle fusion factor
+    (:mod:`repro.compiler.macrocycle`). ``interpret=True`` emulates on
+    CPU; non-interpret lowering relies on Mosaic's scalar
+    dynamic-slice/update along the lane axis.
+    """
+    from repro.compiler.macrocycle import fuse_macrocycles
+    n_words, cols = state_words.shape
+    c_pad = int(np.ceil(cols / 128) * 128)
+    w_pad = int(np.ceil(max(n_words, 1) / word_block) * word_block)
+    st = jnp.zeros((w_pad, c_pad), jnp.int32)
+    st = st.at[:n_words, :cols].set(
+        jax.lax.bitcast_convert_type(state_words, jnp.int32))
+
+    mt = fuse_macrocycles(packed, macro)
+    tm, k, m = mt.gate_id.shape
+    # Padded, device-resident tables memoized per (factor, c_pad):
+    # decode traffic re-runs the same program, so the lane-padded
+    # init-word build and the host->device uploads happen once, not per
+    # call (the hot-path cost would otherwise be hundreds of KB per
+    # token for the wide multipliers).
+    cache = getattr(packed, "_pallas_table_cache", None)
+    if cache is None:
+        cache = {}
+        packed._pallas_table_cache = cache
+    tabs = cache.get((mt.factor, c_pad))
+    if tabs is None:
+        init_words = np.zeros((tm, k, c_pad), np.int32)
+        init_words[:, :, :mt.init_words.shape[2]] = \
+            mt.init_words.view(np.int32)
+        tabs = (jnp.asarray(mt.gate_id),
+                jnp.asarray(mt.in_cols[:, :, :, 0]),
+                jnp.asarray(mt.in_cols[:, :, :, 1]),
+                jnp.asarray(mt.in_cols[:, :, :, 2]),
+                jnp.asarray(mt.out_col),
+                jnp.asarray(init_words))
+        cache[(mt.factor, c_pad)] = tabs
+    out = _run_packed(st, *tabs,
+                      word_block=word_block, interpret=interpret,
+                      tm=tm, k=k, m=m, c=c_pad)
+    return jax.lax.bitcast_convert_type(out[:n_words, :cols], jnp.uint32)
 
 
 def crossbar_run_pallas(state_bits: jnp.ndarray, packed: PackedProgram,

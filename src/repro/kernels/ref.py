@@ -1,13 +1,30 @@
-"""Pure-jnp oracles for the Pallas kernels (the allclose references)."""
+"""Pure-jnp oracles for the Pallas kernels (the allclose references).
+
+Two executors live here:
+
+* :func:`crossbar_run_ref` — the original per-cell scan: state is
+  ``(rows, C)`` uint8 {0,1}, one lane per cell, one scan step per cycle.
+* :func:`crossbar_run_ref_packed` — the bit-plane packed scan: rows are
+  packed 32-per-``uint32`` word (:func:`repro.core.bits.pack_rows`;
+  32-bit words because JAX runs with x64 disabled and TPUs are 32-bit
+  machines), every gate evaluates word-wide with pure bitwise ops
+  (``NOR = ~(x0|x1)``, ``MIN3 = ~majority3`` — minority-of-3 is the
+  complement of majority-of-3), and consecutive cycles are macro-fused
+  (:mod:`repro.compiler.macrocycle`) so the scan runs
+  ``ceil(T/factor)`` steps with a ``factor``-deep unrolled body.
+"""
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.executor import PackedProgram
+from repro.core.executor import PackedProgram, gate_eval_packed
 from repro.core.isa import Gate
 
-__all__ = ["crossbar_run_ref", "bitserial_matmul_ref"]
+__all__ = ["crossbar_run_ref", "crossbar_run_ref_packed",
+           "bitserial_matmul_ref"]
 
 
 def crossbar_run_ref(state_bits: jnp.ndarray, packed: PackedProgram
@@ -39,6 +56,62 @@ def crossbar_run_ref(state_bits: jnp.ndarray, packed: PackedProgram
     st = jnp.pad(state_bits.astype(jnp.uint8), ((0, 0), (0, pad)))
     st, _ = jax.lax.scan(step, st, tables)
     return st[:, :state_bits.shape[1]]
+
+
+@functools.partial(jax.jit, static_argnames=("factor",))
+def _packed_scan(st, gate_id, in_cols, out_col, init_words, *, factor: int):
+    def step(st, tabs):
+        gids, icss, ocss, inis = tabs
+        for j in range(factor):
+            gid, ics, ocs, ini = gids[j], icss[j], ocss[j], inis[j]
+            st = st | ini[None, :]          # batched SET: word-wide OR
+            # All gathers before the write: ops in a cycle are
+            # simultaneous and observe pre-cycle state.
+            x0 = st[:, ics[:, 0]]
+            x1 = st[:, ics[:, 1]]
+            x2 = st[:, ics[:, 2]]
+            res = gate_eval_packed(jnp, gid[None, :], x0, x1, x2)
+            # Gather-AND-scatter write: XLA keeps this in place inside
+            # the scan, where a full-ones update plane would copy the
+            # whole state per cycle. Duplicate output columns exist only
+            # at the side-effect-free scratch column (NOP padding),
+            # where any single write is as good as the AND of all.
+            st = st.at[:, ocs].set(st[:, ocs] & res)
+        return st, None
+
+    st, _ = jax.lax.scan(step, st, (gate_id, in_cols, out_col, init_words))
+    return st
+
+
+def crossbar_run_ref_packed(state_words: jnp.ndarray, packed: PackedProgram,
+                            macro: int = 1) -> jnp.ndarray:
+    """Bit-plane packed lax.scan executor (see module docstring).
+
+    ``state_words`` is ``(W, C)`` uint32 from
+    :func:`repro.core.bits.pack_rows` with ``word_bits=32``; returns the
+    final ``(W, C)`` uint32 words (``C`` = the packed table width).
+    ``macro`` is the macro-cycle fusion factor: the scan runs over
+    ``ceil(T/macro)`` fused steps, each unrolling ``macro`` cycles.
+    """
+    from repro.compiler.macrocycle import fuse_macrocycles
+    mt = fuse_macrocycles(packed, macro)
+    # Device-resident tables memoized next to the macro tables: decode
+    # traffic re-runs the same program, so the host->device upload of
+    # the ~6 table arrays must happen once per (program, factor), not
+    # per call.
+    cache = getattr(packed, "_jax_table_cache", None)
+    if cache is None:
+        cache = {}
+        packed._jax_table_cache = cache
+    tabs = cache.get(mt.factor)
+    if tabs is None:
+        tabs = (jnp.asarray(mt.gate_id), jnp.asarray(mt.in_cols),
+                jnp.asarray(mt.out_col), jnp.asarray(mt.init_words))
+        cache[mt.factor] = tabs
+    pad = packed.init_mask.shape[1] - state_words.shape[1]
+    st = jnp.pad(state_words.astype(jnp.uint32), ((0, 0), (0, pad)))
+    st = _packed_scan(st, *tabs, factor=mt.factor)
+    return st[:, :state_words.shape[1]]
 
 
 def bitserial_matmul_ref(x: jnp.ndarray, w: jnp.ndarray,

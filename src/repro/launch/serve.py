@@ -72,6 +72,12 @@ def main() -> None:
                          "head = LM head only; ffn = + FFN projections "
                          "(incl. MoE experts); full = + attention "
                          "q/k/v/o — all via co-scheduled crossbar groups")
+    ap.add_argument("--pim-backend", default=None,
+                    help="execution backend spec for the shared engine, "
+                         "e.g. 'jax:pack=true,macro=8' (bit-plane packed "
+                         "words — the fast path for wide decode batches) "
+                         "or 'pallas:interpret=false' on real TPU; "
+                         "default: the engine's numpy reference")
     args = ap.parse_args()
 
     pim = args.smoke if args.pim is None else args.pim
@@ -88,6 +94,9 @@ def main() -> None:
     engine = get_engine()
     if args.pim_k is not None:
         engine.coschedule_k = args.pim_k
+    if args.pim_backend is not None:
+        from repro.engine import resolve_backend
+        engine.backend = resolve_backend(args.pim_backend)
 
     # Full-block serving plan: lower every enabled scope's linears onto
     # co-scheduled crossbar groups *before* prefill/decode — the fused
@@ -149,8 +158,9 @@ def main() -> None:
                 f"PIM serve path violated compile-once: hits={post['hits']}"
                 f" recompiles={recompiles}")
         log.info("PIM LM head: %d-bit MultPIM-MAC via shared engine "
-                 "(backend=%s), compile-once verified", cfg.pim_linear_bits,
-                 engine.backend.name)
+                 "(backend=%s%s), compile-once verified",
+                 cfg.pim_linear_bits, engine.backend.name,
+                 ":pack" if getattr(engine.backend, "pack", False) else "")
         # The co-scheduled K-MAC group the decode loop is accounted at:
         # one fused crossbar pass serves K MACs (disjoint partition
         # ranges), up to K-fold fewer passes than sequential MACs. A MAC

@@ -396,27 +396,28 @@ def test_autotune_row_block_policy():
     assert autotune_row_block(10000) == 512
 
 
-def test_engine_autotunes_pallas_row_block_on_first_run():
+def test_engine_autotunes_pallas_row_block_per_rows_bucket():
     eng = Engine(backend="pallas")
     exe = eng.compile("multpim", 4)
-    assert eng.tuned_row_block is None
     assert exe.cost().row_block is None            # not tuned yet
     exe.run({"a": [3, 5, 7], "b": [5, 6, 7]})
-    assert eng.tuned_row_block == 8                # 3 rows -> 8-row tile
-    assert exe.cost().row_block == 8
-    # second executable on the same engine reuses the cached choice
+    assert exe.cost().row_block == 8               # 3 rows -> 8-row tile
+    # A wider batch tunes from its own rows-bucket: the small warmup
+    # batch above does NOT pin the 8-row tile (first-batch-wins is gone).
     exe2 = eng.compile("multpim", 2)
-    assert exe2.cost().row_block == 8
     out = exe2.run({"a": list(range(20)) * 2, "b": [3] * 40})
     assert [int(v) for v in out["out"][:4]] == [0, 3, 6, 9]
-    assert eng.tuned_row_block == 8                # first choice sticks
+    assert exe2.cost().row_block == 64             # 40 rows -> 64-row tile
+    # Same shape class keeps the same block (stable jit cache per
+    # bucket: same tile -> same traced shapes).
+    exe2.run({"a": [1] * 33, "b": [2] * 33})
+    assert exe2.cost().row_block == 64
 
 
 def test_explicit_row_block_is_honored_over_autotune():
     eng = Engine(backend="pallas:row_block=64")
     exe = eng.compile("multpim", 4)
     exe.run({"a": [1], "b": [1]})
-    assert eng.tuned_row_block is None             # nothing to tune
-    assert exe.cost().row_block == 64
+    assert exe.cost().row_block == 64              # policy, not batch shape
     bk = resolve_backend("pallas:interpret=true,row_block=64")
     assert bk.row_block == 64

@@ -35,6 +35,35 @@ def test_list_scheduler_verified_and_never_worse_than_greedy(kind, n):
     assert st.cycles_after <= greedy.n_cycles
 
 
+@pytest.mark.parametrize("n", [8, 16])
+def test_list_closes_lockstep_desync_on_multpim(n):
+    """Regression for the lockstep desync (multpim list=321 vs
+    greedy=291 at N=16): the ALAP/stabbed init batcher must keep the
+    pure list schedule no worse than greedy on MultPIM's lockstep stage
+    schedules — the min(list, greedy) guard may no longer be what saves
+    it."""
+    raw = multpim_multiplier(n)
+    _, st = optimize(raw, PassConfig(scheduler="list"))
+    assert st.list_cycles <= st.greedy_cycles
+
+
+@pytest.mark.parametrize("strategy", ["asap", "stabbed", "auto"])
+def test_list_schedule_strategies_verified(strategy):
+    """Every strategy (and the auto min) yields a valid bit-exact
+    program; auto is never longer than either pure strategy."""
+    raw = multpim_multiplier(8)
+    p = list_schedule(raw, strategy=strategy)
+    p.validate()
+    verify_or_raise(raw, p)
+    if strategy == "auto":
+        assert p.n_cycles <= list_schedule(raw, strategy="asap").n_cycles
+
+
+def test_unknown_strategy_rejected():
+    with pytest.raises(ValueError):
+        list_schedule(multpim_multiplier(4), strategy="alap2")
+
+
 def test_list_scheduler_beats_greedy_on_serial_movement():
     """RIME's serial inter-partition movement is where from-scratch
     rescheduling wins outright over backward hoisting."""
