@@ -1,19 +1,22 @@
 """Perf smoke gate: fail CI when cycles-per-MAC (or any tracked cycle
 count) regresses more than 5% against the checked-in baseline.
 
-The gated metrics are *deterministic compiler outputs* (cycle counts
+Most gated metrics are *deterministic compiler outputs* (cycle counts
 from the opt / sim_throughput benchmark paths at small N), not
 wall-clock, so the gate is immune to runner noise while still catching
-real scheduling or co-scheduling regressions. Wall-clock throughput of
-the bit-plane packed backends is additionally measured and printed as
-``info_*`` metrics — **informational only**: they are excluded from the
-baseline and never gate (wall-clock gating needs at least two recorded
-baselines on comparable runners before a tolerance is defensible).
+real scheduling or co-scheduling regressions; those gate at the tight
+``TOLERANCE``. Wall-clock throughput of the bit-plane packed backends
+(``wall_*`` metrics, introduced as ``info_*`` one baseline ago) is now
+in the baseline too, gated at the deliberately generous
+``WALL_TOLERANCE`` — it only catches gross regressions (a packed
+backend silently falling off its fast path), never CI-runner noise.
+Ratios like ``info_packed_speedup_vs_jax`` stay informational: both
+sides of a ratio move with the machine, so no tolerance is defensible.
 
   PYTHONPATH=src python -m benchmarks.perf_smoke                 # gate
   PYTHONPATH=src python -m benchmarks.perf_smoke --write-baseline
 
-Baseline lives at ``benchmarks/baseline_pr5.json``; regenerate it (and
+Baseline lives at ``benchmarks/baseline_pr6.json``; regenerate it (and
 review the diff!) whenever a change legitimately improves or trades off
 these numbers.
 """
@@ -25,8 +28,10 @@ import os
 import sys
 
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__),
-                                "baseline_pr5.json")
-TOLERANCE = 0.05          # >5% regression fails
+                                "baseline_pr6.json")
+TOLERANCE = 0.05          # >5% regression fails (deterministic cycles)
+WALL_PREFIX = "wall_"     # wall-clock: gated, but loosely
+WALL_TOLERANCE = 1.0      # >2x regression fails (absorbs runner noise)
 INFO_PREFIX = "info_"     # reported, never gated
 
 
@@ -67,11 +72,10 @@ def collect_metrics(n: int = 8, k: int = 4, n_elems: int = 8) -> dict:
                               pim_linear_mode="pim", pim_block_mode="full")
     scope = plan_block(cfg, eng).scope_metrics()
 
-    # Wall-clock throughput, packed vs unpacked (informational — see
-    # module docstring): states/sec through Executable.run at a serve-
-    # sized batch, lower-is-better us-per-1k-states so the metric shape
-    # matches the cycle metrics if it is ever promoted to gating. The
-    # timing loop is benchmarks.tables.time_backends — the same
+    # Wall-clock throughput, packed vs unpacked (gated at
+    # WALL_TOLERANCE — see module docstring): lower-is-better
+    # us-per-1k-states through Executable.run at a serve-sized batch.
+    # The timing loop is benchmarks.tables.time_backends — the same
     # methodology as the `throughput` section, just a narrower spec
     # list and one row count, so smoke stays fast.
     from benchmarks.tables import time_backends
@@ -96,12 +100,13 @@ def collect_metrics(n: int = 8, k: int = 4, n_elems: int = 8) -> dict:
         f"block_attn_cycles_per_mac_n{n}": scope["attn"]["cycles_per_mac"],
         f"block_full_cycles_per_token_n{n}": float(
             sum(m["cycles_per_token"] for m in scope.values())),
-        # informational wall-clock (never gated, never in the baseline)
-        "info_us_per_1k_states_jax": wall["jax"] * 1e6 / (rows / 1e3),
-        "info_us_per_1k_states_jax_packed":
+        # wall-clock (gated at WALL_TOLERANCE, lower is better)
+        "wall_us_per_1k_states_jax": wall["jax"] * 1e6 / (rows / 1e3),
+        "wall_us_per_1k_states_jax_packed":
             wall["jax:pack=true"] * 1e6 / (rows / 1e3),
-        "info_us_per_1k_states_numpy_packed":
+        "wall_us_per_1k_states_numpy_packed":
             wall["numpy:pack=true"] * 1e6 / (rows / 1e3),
+        # informational ratio (never gated, never in the baseline)
         "info_packed_speedup_vs_jax":
             wall["jax"] / wall["jax:pack=true"],
     }
@@ -136,11 +141,13 @@ def main() -> None:
                             f"(baseline {base})")
             continue
         got = metrics[name]
-        if got > base * (1 + args.tolerance):
+        tol = (WALL_TOLERANCE if name.startswith(WALL_PREFIX)
+               else args.tolerance)
+        if got > base * (1 + tol):
             failures.append(
                 f"{name}: {got:.2f} vs baseline {base:.2f} "
                 f"(+{100 * (got / base - 1):.1f}%, limit "
-                f"+{100 * args.tolerance:.0f}%)")
+                f"+{100 * tol:.0f}%)")
     for name in sorted(set(metrics) - set(baseline)):
         if not name.startswith(INFO_PREFIX):
             print(f"note: new metric '{name}' not in baseline")

@@ -2,7 +2,7 @@
 
 Prints ``name,us_per_call,derived`` CSV (the harness contract) and, so
 the perf trajectory is tracked across PRs, writes a machine-readable
-JSON (``--json``, default ``BENCH_pr5.json``) mapping each section to
+JSON (``--json``, default ``BENCH_pr6.json``) mapping each section to
 its rows::
 
     {"sections": {"table1": [[name, us_per_call, derived], ...], ...},
@@ -10,8 +10,10 @@ its rows::
 
   PYTHONPATH=src python -m benchmarks.run [--section table1|table2|table3|
                                            fa|opt|sim|throughput|block_pim|
-                                           roofline|all|sec1,sec2,...]
-                                          [--json BENCH_pr5.json|off]
+                                           obs|roofline|all|sec1,sec2,...]
+                                          [--json BENCH_pr6.json|off]
+                                          [--trace OUT.json]
+                                          [--metrics OUT.json]
 """
 from __future__ import annotations
 
@@ -24,9 +26,18 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--section", default="all")
     ap.add_argument("--dryrun-json", default="dryrun_results.json")
-    ap.add_argument("--json", default="BENCH_pr5.json",
+    ap.add_argument("--json", default="BENCH_pr6.json",
                     help="machine-readable output path ('off' disables)")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="enable span tracing and write a Chrome "
+                         "trace-event file at exit")
+    ap.add_argument("--metrics", default=None, metavar="OUT.json",
+                    help="write the obs metrics snapshot as JSON")
     args = ap.parse_args()
+
+    from repro import obs
+    if args.trace:
+        obs.enable()
 
     from . import tables
     from .roofline import roofline_rows
@@ -42,6 +53,7 @@ def main() -> None:
         "pim_plan": tables.pim_plan_sweep,
         "block_pim": tables.block_pim_plan,
         "energy": tables.energy_table,
+        "obs": tables.obs_metrics,
         "roofline": lambda: roofline_rows(args.dryrun_json),
     }
     names = (list(sections) if args.section == "all"
@@ -63,6 +75,12 @@ def main() -> None:
             json.dump({"sections": collected, "errors": errors}, f, indent=1)
         print(f"wrote {args.json} ({len(collected)} sections)",
               file=sys.stderr)
+    if args.trace:
+        n_ev = obs.export_trace(args.trace)
+        print(f"trace: {n_ev} events -> {args.trace}", file=sys.stderr)
+    if args.metrics:
+        obs.write_metrics(args.metrics)
+        print(f"metrics snapshot -> {args.metrics}", file=sys.stderr)
     sys.exit(1 if errors else 0)
 
 

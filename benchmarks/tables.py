@@ -410,6 +410,81 @@ def block_pim_plan(archs=("gemma2-9b", "deepseek-moe-16b")) -> List[Row]:
     return rows
 
 
+def obs_metrics(n: int = 16) -> List[Row]:
+    """Observability section: tracer overhead (the disabled hot path
+    must be ~free), end-to-end ``Executable.run`` wall time with tracing
+    off vs on, and the switching-activity energy proxy
+    (``ExecCost.energy_proxy``) for multpim vs rime at N=16."""
+    from repro import obs
+    from repro.engine import get_engine
+
+    from repro.obs.trace import Tracer
+
+    rows: List[Row] = []
+    # Disabled-path span cost — the price every instrumented call site
+    # pays in production (span() returns the shared NULL_SPAN, so this
+    # is one enabled-flag check + one no-op context manager). A local
+    # Tracer keeps the micro-bench's 20k events out of any session
+    # trace (--trace) and the global tracer's state untouched.
+    t = Tracer()
+    reps = 200_000
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        with t.span("bench.noop"):
+            pass
+    ns_disabled = (time.perf_counter() - t0) / reps * 1e9
+    t.enable()
+    reps_on = 20_000
+    t0 = time.perf_counter()
+    for _ in range(reps_on):
+        with t.span("bench.noop"):
+            pass
+    ns_enabled = (time.perf_counter() - t0) / reps_on * 1e9
+    rows.append(("obs/span-overhead", 0.0,
+                 f"disabled_ns={ns_disabled:.0f};"
+                 f"enabled_ns={ns_enabled:.0f}"))
+    # End-to-end overhead: best-of-trials run wall time with tracing
+    # off vs on. The acceptance bar is <1% disabled overhead; the off
+    # timing *is* the disabled path (instrumentation always present).
+    eng = get_engine()
+    exe = eng.compile("multpim", n)
+    rng = np.random.default_rng(11)
+    R = 2048
+    batch = {"a": rng.integers(0, 1 << n, R),
+             "b": rng.integers(0, 1 << n, R)}
+    spec = "numpy:pack=true"
+    exe.run(batch, backend=spec)              # warm
+
+    def _best_run() -> float:
+        best = float("inf")
+        for _ in range(5):
+            t0 = time.perf_counter()
+            exe.run(batch, backend=spec)
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    was_enabled = obs.enabled()
+    obs.disable()
+    off = _best_run()
+    obs.enable()
+    on = _best_run()
+    if not was_enabled:
+        obs.disable()
+    rows.append((f"obs/run-overhead/N={n},rows={R}", off * 1e6,
+                 f"disabled_us={off * 1e6:.0f};enabled_us={on * 1e6:.0f};"
+                 f"enabled_overhead_pct={(on / off - 1) * 100:.1f}"))
+    # Switching-activity energy proxy: mean memristor bit flips per
+    # crossbar row per multiplication — the data-transition counterpart
+    # of energy_table()'s every-gate-charged pJ model.
+    for kind in ("multpim", "rime"):
+        c = eng.compile(kind, n).cost()
+        rows.append((f"obs/energy-proxy/{kind}/N={n}", 0.0,
+                     f"bit_flips_per_row={c.energy_proxy:.1f};"
+                     f"cycles={c.cycles};"
+                     f"energy_pJ={c.energy_uj * 1e6:.1f}"))
+    return rows
+
+
 def energy_table(n_values=(16, 32)) -> List[Row]:
     """Beyond-paper: per-multiplication energy proxy (gate activations x
     pJ/gate) — the axis RIME optimizes for; MultPIM wins it too because

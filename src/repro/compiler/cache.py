@@ -22,9 +22,11 @@ coexist.
 from __future__ import annotations
 
 import threading
+import time
 from dataclasses import dataclass
 from typing import Callable, Dict, Optional, Union
 
+from repro import obs
 from repro.core.executor import PackedProgram, pack_program
 from repro.core.program import Program
 
@@ -35,6 +37,21 @@ from .verify import VerifyReport, verify_or_raise
 __all__ = ["CompiledEntry", "ProgramCache", "compile_cached",
            "register_builder", "cache_stats", "clear_cache", "BUILDERS",
            "OpSpec"]
+
+
+# Process-lifetime instruments (module-level so the hot path skips the
+# registry lookup; obs.reset_metrics() zeroes them in place). Every
+# ProgramCache instance feeds the same counters — they answer "what did
+# this process's compile layer do", which Engine.stats()/obs.dump()
+# report alongside the per-cache hit/miss fields.
+_MET_MEM_HIT = obs.counter("cache.memory_hit")
+_MET_MISS = obs.counter("cache.miss")
+_MET_DISK_HIT = obs.counter("cache.disk_hit")
+_MET_COMPILE = obs.counter("cache.compile")
+_MET_VERIFY = obs.counter("cache.verify")
+_MET_VERIFY_FAIL = obs.counter("cache.verify_fail")
+_MET_COMPILE_MS = obs.histogram("cache.compile_ms")
+_MET_VERIFY_MS = obs.histogram("cache.verify_ms")
 
 
 def _default_builders() -> Dict[str, Callable[..., Program]]:
@@ -125,7 +142,10 @@ class ProgramCache:
                 self.hits += 1
             else:
                 self.misses += 1
-        if ent is None:
+        if ent is not None:
+            _MET_MEM_HIT.inc()
+        else:
+            _MET_MISS.inc()
             ent = self._load_or_compile(spec)
             with self._lock:
                 ent = self._entries.setdefault(spec, ent)
@@ -134,12 +154,17 @@ class ProgramCache:
             # happily served by an already-verified entry. A failed
             # verification evicts the entry so nothing — including later
             # verify=False calls — can be served a known-bad program.
+            t0 = time.perf_counter()
             try:
-                ent.verified = verify_or_raise(ent.raw, ent.program)
+                with obs.span("cache.verify", kind=spec.kind, n=spec.n):
+                    ent.verified = verify_or_raise(ent.raw, ent.program)
             except Exception:
+                _MET_VERIFY_FAIL.inc()
                 with self._lock:
                     self._entries.pop(spec, None)
                 raise
+            _MET_VERIFY.inc()
+            _MET_VERIFY_MS.observe((time.perf_counter() - t0) * 1e3)
             self._spill(spec, ent)
         return ent
 
@@ -150,10 +175,12 @@ class ProgramCache:
         # finish wins, others adopt it.
         if self.use_disk and spec.kind not in _CUSTOM_KINDS:
             from .diskcache import load_entry
-            ent = load_entry(spec)
+            with obs.span("cache.disk_load", kind=spec.kind, n=spec.n):
+                ent = load_entry(spec)
             if ent is not None:
                 with self._lock:
                     self.disk_hits += 1
+                _MET_DISK_HIT.inc()
                 return ent
         if spec.kind not in BUILDERS:
             for k, v in _default_builders().items():
@@ -161,12 +188,20 @@ class ProgramCache:
         if spec.kind not in BUILDERS:
             raise KeyError(f"unknown program kind '{spec.kind}' "
                            f"(known: {sorted(BUILDERS)})")
-        raw = BUILDERS[spec.kind](spec.n, **spec.flags_dict())
-        prog, stats = optimize(raw, spec.pass_config())
+        t0 = time.perf_counter()
+        with obs.span("cache.compile", kind=spec.kind, n=spec.n) as sp:
+            with obs.span("compile.build", kind=spec.kind, n=spec.n):
+                raw = BUILDERS[spec.kind](spec.n, **spec.flags_dict())
+            prog, stats = optimize(raw, spec.pass_config())
+            with obs.span("compile.pack"):
+                packed = pack_program(prog)
+            sp.set(cycles=prog.n_cycles, memristors=prog.n_memristors)
+        _MET_COMPILE.inc()
+        _MET_COMPILE_MS.observe((time.perf_counter() - t0) * 1e3)
         with self._lock:
             self.compiles += 1
         return CompiledEntry(key=spec, raw=raw, program=prog,
-                             packed=pack_program(prog), stats=stats)
+                             packed=packed, stats=stats)
 
     def _spill(self, spec: OpSpec, ent: CompiledEntry) -> None:
         if (self.use_disk and not ent.from_disk

@@ -46,6 +46,7 @@ import bisect
 from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Set, Tuple
 
+from repro import obs
 from repro.core.isa import Gate, Op
 from repro.core.program import Cycle, Layout, Program
 
@@ -444,41 +445,63 @@ def optimize(prog: Program, config: Optional[PassConfig] = None
                      cycles_before=prog.n_cycles,
                      cols_before=prog.n_memristors)
     cur = prog
-    if cfg.fuse:
-        cur = fuse_ops(cur, stats)
-        cur.validate()
-    if cfg.dead_init:
-        cur = eliminate_dead_inits(cur, stats)
-        cur.validate()
-    if cfg.coalesce:
-        cur = coalesce_inits(cur, stats)
-        cur.validate()
-    if cfg.compact:
-        if cfg.scheduler == "list":
-            from .schedule import list_schedule
-            listed = list_schedule(cur)
-            listed.validate()
-            greedy_stats = OptStats()
-            greedy = compact_cycles(cur, greedy_stats)
-            greedy.validate()
-            stats.list_cycles = listed.n_cycles
-            stats.greedy_cycles = greedy.n_cycles
-            # Never worse than greedy: keep the shorter schedule.
-            if listed.n_cycles <= greedy.n_cycles:
-                stats.scheduler_used = "list"
-                cur = listed
+
+    # Each pass runs inside a span recording wall time *and* its cycle
+    # delta, so a trace shows both where compile time goes and which
+    # pass actually bought schedule length.
+    def run_pass(pname, fn):
+        nonlocal cur
+        before = cur.n_cycles
+        with obs.span(f"compile.{pname}", cycles_before=before) as sp:
+            cur = fn(cur, stats)
+            cur.validate()
+            sp.set(cycles_after=cur.n_cycles,
+                   cycle_delta=before - cur.n_cycles)
+
+    with obs.span("compile.optimize", program=prog.name,
+                  cycles_before=prog.n_cycles,
+                  scheduler=cfg.scheduler) as top:
+        if cfg.fuse:
+            run_pass("fuse", fuse_ops)
+        if cfg.dead_init:
+            run_pass("dead_init", eliminate_dead_inits)
+        if cfg.coalesce:
+            run_pass("coalesce", coalesce_inits)
+        if cfg.compact:
+            if cfg.scheduler == "list":
+                before = cur.n_cycles
+                with obs.span("compile.compact",
+                              cycles_before=before) as sp:
+                    from .schedule import list_schedule
+                    with obs.span("compile.list_schedule"):
+                        listed = list_schedule(cur)
+                        listed.validate()
+                    greedy_stats = OptStats()
+                    with obs.span("compile.greedy_compact"):
+                        greedy = compact_cycles(cur, greedy_stats)
+                        greedy.validate()
+                    stats.list_cycles = listed.n_cycles
+                    stats.greedy_cycles = greedy.n_cycles
+                    # Never worse than greedy: keep the shorter schedule.
+                    if listed.n_cycles <= greedy.n_cycles:
+                        stats.scheduler_used = "list"
+                        cur = listed
+                    else:
+                        stats.scheduler_used = "greedy"
+                        stats.ops_hoisted = greedy_stats.ops_hoisted
+                        stats.cycles_dropped += greedy_stats.cycles_dropped
+                        cur = greedy
+                    sp.set(cycles_after=cur.n_cycles,
+                           cycle_delta=before - cur.n_cycles,
+                           scheduler_used=stats.scheduler_used)
             else:
                 stats.scheduler_used = "greedy"
-                stats.ops_hoisted = greedy_stats.ops_hoisted
-                stats.cycles_dropped += greedy_stats.cycles_dropped
-                cur = greedy
-        else:
-            stats.scheduler_used = "greedy"
-            cur = compact_cycles(cur, stats)
-            cur.validate()
-    if cfg.remap:
-        cur = remap_columns(cur, stats)
-        cur.validate()
-    stats.cycles_after = cur.n_cycles
-    stats.cols_after = cur.n_memristors
+                run_pass("compact", compact_cycles)
+        if cfg.remap:
+            run_pass("remap", remap_columns)
+        stats.cycles_after = cur.n_cycles
+        stats.cols_after = cur.n_memristors
+        top.set(cycles_after=stats.cycles_after,
+                cycles_saved=stats.cycles_saved,
+                cols_saved=stats.cols_saved)
     return cur, stats

@@ -44,6 +44,7 @@ from typing import Callable, Dict, Optional, Protocol, Union, runtime_checkable
 
 import numpy as np
 
+from repro import obs
 from repro.compiler.macrocycle import DEFAULT_MACRO_FACTOR as DEFAULT_MACRO
 from repro.core.bits import pack_rows, unpack_rows
 from repro.core.executor import PackedProgram, gate_eval_packed
@@ -86,8 +87,15 @@ class NumpyBackend:
     def run_state(self, packed: PackedProgram, state: np.ndarray) -> np.ndarray:
         if self.pack:
             return self._run_packed(packed, state)
+        with obs.span("backend.kernel", backend=self.name,
+                      rows=state.shape[0], cycles=packed.n_cycles):
+            return self._run_unpacked(packed, state)
+
+    def _run_unpacked(self, packed: PackedProgram,
+                      state: np.ndarray) -> np.ndarray:
         st = np.asarray(state, dtype=np.uint8).copy()
-        gate_id, in_cols, out_col = packed.gate_id, packed.in_cols, packed.out_col
+        gate_id, in_cols = packed.gate_id, packed.in_cols
+        out_col = packed.out_col
         for t in range(packed.n_cycles):
             imask = packed.init_mask[t]
             if imask.any():
@@ -117,22 +125,28 @@ class NumpyBackend:
                     state: np.ndarray) -> np.ndarray:
         state = np.asarray(state, dtype=np.uint8)
         rows = state.shape[0]
-        st = pack_rows(state, 64)
+        with obs.span("backend.pack", backend=self.name, rows=rows):
+            st = pack_rows(state, 64)
         full = ~np.uint64(0)
         gate_id, in_cols, out_col = (packed.gate_id, packed.in_cols,
                                      packed.out_col)
-        for t in range(packed.n_cycles):
-            imask = packed.init_mask[t]
-            if imask.any():
-                st[:, imask] = full
-                continue
-            gid, ics, ocs = gate_id[t], in_cols[t], out_col[t]
-            # Gathers before the write: ops in a cycle are simultaneous.
-            res = gate_eval_packed(np, gid[None, :], st[:, ics[:, 0]],
-                                   st[:, ics[:, 1]], st[:, ics[:, 2]])
-            # Exact AND accumulation, duplicate scratch writes included.
-            np.bitwise_and.at(st, (slice(None), ocs), res)
-        return unpack_rows(st, rows)
+        with obs.span("backend.kernel", backend=self.name, rows=rows,
+                      cycles=packed.n_cycles):
+            for t in range(packed.n_cycles):
+                imask = packed.init_mask[t]
+                if imask.any():
+                    st[:, imask] = full
+                    continue
+                gid, ics, ocs = gate_id[t], in_cols[t], out_col[t]
+                # Gathers before the write: ops in a cycle are
+                # simultaneous.
+                res = gate_eval_packed(np, gid[None, :], st[:, ics[:, 0]],
+                                       st[:, ics[:, 1]], st[:, ics[:, 2]])
+                # Exact AND accumulation, duplicate scratch writes
+                # included.
+                np.bitwise_and.at(st, (slice(None), ocs), res)
+        with obs.span("backend.unpack", backend=self.name, rows=rows):
+            return unpack_rows(st, rows)
 
 
 # ------------------------------------------------------------------ JAX ----
@@ -163,13 +177,20 @@ class JaxBackend:
                                        crossbar_run_ref_packed)
         if self.pack:
             rows = state.shape[0]
-            words = pack_rows(np.asarray(state, dtype=np.uint8), 32)
-            final = crossbar_run_ref_packed(
-                jnp.asarray(words), packed,
-                macro=_macro_factor(self.macro))
-            return unpack_rows(np.asarray(final), rows)
-        final = crossbar_run_ref(jnp.asarray(state, dtype=jnp.uint8), packed)
-        return np.asarray(final)
+            with obs.span("backend.pack", backend=self.name, rows=rows):
+                words = pack_rows(np.asarray(state, dtype=np.uint8), 32)
+            with obs.span("backend.kernel", backend=self.name, rows=rows,
+                          cycles=packed.n_cycles):
+                final = crossbar_run_ref_packed(
+                    jnp.asarray(words), packed,
+                    macro=_macro_factor(self.macro))
+            with obs.span("backend.unpack", backend=self.name, rows=rows):
+                return unpack_rows(np.asarray(final), rows)
+        with obs.span("backend.kernel", backend=self.name,
+                      rows=state.shape[0], cycles=packed.n_cycles):
+            final = crossbar_run_ref(jnp.asarray(state, dtype=jnp.uint8),
+                                     packed)
+            return np.asarray(final)
 
 
 # --------------------------------------------------------------- Pallas ----
@@ -221,19 +242,25 @@ class PallasBackend:
                                                  crossbar_run_pallas_packed)
         if self.pack:
             rows = state.shape[0]
-            words = pack_rows(np.asarray(state, dtype=np.uint8), 32)
+            with obs.span("backend.pack", backend=self.name, rows=rows):
+                words = pack_rows(np.asarray(state, dtype=np.uint8), 32)
             word_block = max(8, (self.row_block or DEFAULT_ROW_BLOCK) // 32)
-            final = crossbar_run_pallas_packed(
-                jnp.asarray(words), packed,
-                macro=_macro_factor(self.macro),
-                word_block=word_block, interpret=self.interpret)
-            return unpack_rows(np.asarray(final), rows)
-        final = crossbar_run_pallas(jnp.asarray(state, dtype=jnp.uint8),
-                                    packed,
-                                    row_block=self.row_block
-                                    or DEFAULT_ROW_BLOCK,
-                                    interpret=self.interpret)
-        return np.asarray(final)
+            with obs.span("backend.kernel", backend=self.name, rows=rows,
+                          cycles=packed.n_cycles):
+                final = crossbar_run_pallas_packed(
+                    jnp.asarray(words), packed,
+                    macro=_macro_factor(self.macro),
+                    word_block=word_block, interpret=self.interpret)
+            with obs.span("backend.unpack", backend=self.name, rows=rows):
+                return unpack_rows(np.asarray(final), rows)
+        with obs.span("backend.kernel", backend=self.name,
+                      rows=state.shape[0], cycles=packed.n_cycles):
+            final = crossbar_run_pallas(jnp.asarray(state, dtype=jnp.uint8),
+                                        packed,
+                                        row_block=self.row_block
+                                        or DEFAULT_ROW_BLOCK,
+                                        interpret=self.interpret)
+            return np.asarray(final)
 
 
 # -------------------------------------------------------------- registry ----

@@ -41,6 +41,7 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro import obs
 from repro.core.bits import from_bits, to_bits
 from repro.core.costmodel import CrossbarSpec
 
@@ -137,9 +138,10 @@ class Engine:
         :func:`repro.compiler.register_builder`.
         """
         kind = OP_KINDS.get(op, op)
-        entry = self.cache.get_or_compile(
-            kind, n, flags=flags, config=config or self.pass_config,
-            verify=verify)
+        with obs.span("engine.compile", op=kind, n=n):
+            entry = self.cache.get_or_compile(
+                kind, n, flags=flags, config=config or self.pass_config,
+                verify=verify)
         return Executable(entry, resolve_backend(backend, self.backend),
                           crossbar=self.crossbar, engine=self)
 
@@ -162,12 +164,13 @@ class Engine:
         if k < 1:
             raise ValueError("k >= 1")
         kind = OP_KINDS.get(op, op)
-        entry = self.cache.get_or_compile(
-            kind, n, flags=flags, config=config or self.pass_config,
-            verify=verify)
-        fused_entry, placements = self._fused([entry] * k,
-                                              name=f"coschedule{k}"
-                                                   f"[{entry.program.name}]")
+        with obs.span("engine.compile_batch", op=kind, n=n, k=k):
+            entry = self.cache.get_or_compile(
+                kind, n, flags=flags, config=config or self.pass_config,
+                verify=verify)
+            fused_entry, placements = self._fused(
+                [entry] * k,
+                name=f"coschedule{k}[{entry.program.name}]")
         inner = Executable(fused_entry, resolve_backend(backend,
                                                         self.backend),
                            crossbar=self.crossbar, engine=self)
@@ -193,8 +196,11 @@ class Engine:
             from repro.compiler.coschedule import (PartitionAllocator,
                                                    coschedule)
             alloc = PartitionAllocator(max_cols=self.crossbar.cols)
-            prog, placements = coschedule(
-                [e.program for e in entries], allocator=alloc, name=name)
+            with obs.span("engine.coschedule", fused=name,
+                          k=len(entries)):
+                prog, placements = coschedule(
+                    [e.program for e in entries], allocator=alloc,
+                    name=name)
             memo = (tuple(entries), CompiledEntry.adhoc(prog), placements)
             with self._batch_lock:
                 prev = self._batch_entries.get(key)
@@ -227,17 +233,18 @@ class Engine:
         members = [GroupSpec.of(s) for s in specs]
         if not members:
             raise ValueError("nothing to group")
-        entries: List["CompiledEntry"] = []
-        labels: List[str] = []
-        for m in members:
-            kind = OP_KINDS.get(m.op, m.op)
-            entry = self.cache.get_or_compile(
-                kind, m.n, flags=m.flags,
-                config=m.config or self.pass_config, verify=verify)
-            entries.extend([entry] * m.copies)
-            labels.extend([m.label or f"{m.op}/n{m.n}"] * m.copies)
-        name = "group[" + ",".join(dict.fromkeys(labels)) + "]"
-        fused_entry, placements = self._fused(entries, name=name)
+        with obs.span("engine.compile_group", members=len(members)):
+            entries: List["CompiledEntry"] = []
+            labels: List[str] = []
+            for m in members:
+                kind = OP_KINDS.get(m.op, m.op)
+                entry = self.cache.get_or_compile(
+                    kind, m.n, flags=m.flags,
+                    config=m.config or self.pass_config, verify=verify)
+                entries.extend([entry] * m.copies)
+                labels.extend([m.label or f"{m.op}/n{m.n}"] * m.copies)
+            name = "group[" + ",".join(dict.fromkeys(labels)) + "]"
+            fused_entry, placements = self._fused(entries, name=name)
         inner = Executable(fused_entry, resolve_backend(backend,
                                                         self.backend),
                            crossbar=self.crossbar, engine=self)

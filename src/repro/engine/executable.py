@@ -25,6 +25,7 @@ from typing import Dict, List, Mapping, Optional, Sequence, Union
 
 import numpy as np
 
+from repro import obs
 from repro.core.bits import from_bits, to_bits
 from repro.core.costmodel import CrossbarSpec
 
@@ -45,7 +46,13 @@ class ExecCost:
     the Pallas row-tiling in effect (explicit backend policy, or the
     autotuned choice this executable last ran with; ``None`` for
     non-Pallas backends or before the first run tunes it). ``pack``
-    reports the backend's bit-plane packing policy.
+    reports the backend's bit-plane packing policy. ``energy_proxy`` is
+    the switching-activity estimate — mean memristor bit flips per
+    crossbar row for one full pass, from
+    :func:`repro.obs.waterfall.switching_activity` — a data-independent
+    proxy that, unlike ``energy_uj``'s every-gate-charged model, sees
+    actual state transitions (a gate whose output cell already holds
+    the computed value switches nothing).
     """
 
     cycles: int
@@ -56,6 +63,7 @@ class ExecCost:
     programs: int = 1
     row_block: Optional[int] = None
     pack: bool = False
+    energy_proxy: Optional[float] = None
 
     @property
     def cycles_per_program(self) -> float:
@@ -127,7 +135,11 @@ class Executable:
             latency_us=prog.n_cycles * self.crossbar.cycle_ns / 1e3,
             energy_uj=gates * self.crossbar.energy_pj_per_gate / 1e6,
             row_block=self._effective_row_block(),
-            pack=getattr(self.backend, "pack", False))
+            pack=getattr(self.backend, "pack", False),
+            # Memoized on the shared packed tables, so repeated cost()
+            # calls (and every Executable over the same cache entry)
+            # simulate the switching profile once.
+            energy_proxy=obs.switching_activity(self.packed))
 
     # --------------------------------------------------------- verify ----
     def verify(self) -> "VerifyReport":
@@ -193,36 +205,46 @@ class Executable:
         if missing:
             raise KeyError(f"missing program inputs {missing} "
                            f"(required: {sorted(prog.input_map)})")
-        planes: Dict[str, np.ndarray] = {}
-        all_ints = True
-        rows = None
-        for name in prog.input_map:
-            bits, was_int = self._marshal(name, batch[name])
-            all_ints &= was_int
-            if rows is None:
-                rows = bits.shape[0]
-            elif bits.shape[0] != rows:
-                raise ValueError(
-                    f"input '{name}': {bits.shape[0]} rows, but other "
-                    f"inputs have {rows}")
-            planes[name] = bits
+        with obs.span("exec.run", program=prog.name,
+                      backend=self.backend.name,
+                      modeled_cycles=prog.n_cycles,
+                      modeled_us=prog.n_cycles
+                      * self.crossbar.cycle_ns / 1e3) as sp:
+            with obs.span("exec.marshal", program=prog.name):
+                planes: Dict[str, np.ndarray] = {}
+                all_ints = True
+                rows = None
+                for name in prog.input_map:
+                    bits, was_int = self._marshal(name, batch[name])
+                    all_ints &= was_int
+                    if rows is None:
+                        rows = bits.shape[0]
+                    elif bits.shape[0] != rows:
+                        raise ValueError(
+                            f"input '{name}': {bits.shape[0]} rows, but "
+                            f"other inputs have {rows}")
+                    planes[name] = bits
 
-        state = np.zeros((rows, self.packed.init_mask.shape[1]),
-                         dtype=np.uint8)
-        for name, cols in prog.input_map.items():
-            state[:, cols] = planes[name]
+                state = np.zeros((rows, self.packed.init_mask.shape[1]),
+                                 dtype=np.uint8)
+                for name, cols in prog.input_map.items():
+                    state[:, cols] = planes[name]
+            sp.set(rows=rows)
 
-        bk = self._autotuned(resolve_backend(backend, default=self.backend),
-                             rows)
-        final = np.asarray(bk.run_state(self.packed, state))
-        if self.engine is not None:
-            self.engine.runs += 1
+            bk = self._autotuned(
+                resolve_backend(backend, default=self.backend), rows)
+            # Pack / kernel / unpack break down further inside the
+            # backend (``backend.*`` spans).
+            final = np.asarray(bk.run_state(self.packed, state))
+            if self.engine is not None:
+                self.engine.runs += 1
 
-        out: Dict[str, np.ndarray] = {}
-        for name, cols in prog.output_map.items():
-            bits = final[:, cols].copy()
-            out[name] = from_bits(bits) if all_ints else bits
-        return out
+            with obs.span("exec.unmarshal", program=prog.name):
+                out: Dict[str, np.ndarray] = {}
+                for name, cols in prog.output_map.items():
+                    bits = final[:, cols].copy()
+                    out[name] = from_bits(bits) if all_ints else bits
+                return out
 
 
 class GroupedExecutable:
@@ -330,34 +352,41 @@ class GroupedExecutable:
         if len(batches) != self.k:
             raise ValueError(f"expected {self.k} operand sets, "
                              f"got {len(batches)}")
-        fused: Dict[str, Union[np.ndarray, list]] = {}
-        group_ints: List[bool] = []
-        for i, b in enumerate(batches):
-            pfx = self.placements[i].prefix
-            missing = sorted(set(self._in_names[i]) - set(b))
-            if missing:
-                raise KeyError(f"operand set {i}: missing inputs {missing}")
-            for name in self._in_names[i]:
-                fused[f"{pfx}{name}"] = b[name]
-            # Same integer-vs-bit-plane rule as Executable._marshal, per
-            # group: the fused pass marshals outputs as ints only when
-            # *every* group is integer-form, so an all-int group mixed
-            # with a bit-plane group must be converted back here to stay
-            # bit-identical to K independent runs.
-            group_ints.append(all(np.asarray(b[name]).ndim <= 1
-                                  for name in self._in_names[i]))
-        out = self.inner.run(fused, backend=backend)
-        results: List[Dict[str, np.ndarray]] = []
-        for i in range(self.k):
-            pfx = self.placements[i].prefix
-            grp = {}
-            for name in self._out_names[i]:
-                val = out[f"{pfx}{name}"]
-                if group_ints[i] and not all(group_ints):
-                    val = from_bits(val)
-                grp[name] = val
-            results.append(grp)
-        return results
+        with obs.span("exec.group_run", program=self.program.name,
+                      k=self.k, backend=self.inner.backend.name,
+                      modeled_cycles=self.n_cycles):
+            with obs.span("exec.scatter", k=self.k):
+                fused: Dict[str, Union[np.ndarray, list]] = {}
+                group_ints: List[bool] = []
+                for i, b in enumerate(batches):
+                    pfx = self.placements[i].prefix
+                    missing = sorted(set(self._in_names[i]) - set(b))
+                    if missing:
+                        raise KeyError(f"operand set {i}: missing inputs "
+                                       f"{missing}")
+                    for name in self._in_names[i]:
+                        fused[f"{pfx}{name}"] = b[name]
+                    # Same integer-vs-bit-plane rule as
+                    # Executable._marshal, per group: the fused pass
+                    # marshals outputs as ints only when *every* group is
+                    # integer-form, so an all-int group mixed with a
+                    # bit-plane group must be converted back here to stay
+                    # bit-identical to K independent runs.
+                    group_ints.append(all(np.asarray(b[name]).ndim <= 1
+                                          for name in self._in_names[i]))
+            out = self.inner.run(fused, backend=backend)
+            with obs.span("exec.gather", k=self.k):
+                results: List[Dict[str, np.ndarray]] = []
+                for i in range(self.k):
+                    pfx = self.placements[i].prefix
+                    grp = {}
+                    for name in self._out_names[i]:
+                        val = out[f"{pfx}{name}"]
+                        if group_ints[i] and not all(group_ints):
+                            val = from_bits(val)
+                        grp[name] = val
+                    results.append(grp)
+                return results
 
 
 class BatchedExecutable(GroupedExecutable):

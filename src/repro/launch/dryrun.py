@@ -39,7 +39,12 @@ from typing import Any, Dict
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.configs import ARCHS, SHAPES, get_config, shape_applicable
+
+# No logging side effects at import time: handlers attach only when
+# main() calls obs.setup_logging() (see repro.obs.logging).
+log = obs.get_logger("dryrun")
 from repro.launch.mesh import make_production_mesh
 from repro.models.model import build_model, input_specs
 from repro.optim.adamw import AdamWConfig, OptState
@@ -231,6 +236,7 @@ def main() -> None:
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--out", default="dryrun_results.json")
     args = ap.parse_args()
+    obs.setup_logging()
 
     cells = []
     if args.all:
@@ -258,8 +264,8 @@ def main() -> None:
                 json.dump(results, f, indent=1)
     n_ok = sum(1 for r in results if r["status"] == "ok")
     n_skip = sum(1 for r in results if r["status"] == "skipped")
-    print(f"dry-run: {n_ok} ok, {n_skip} skipped, {failed} failed "
-          f"-> {args.out}")
+    log.info("dry-run: %d ok, %d skipped, %d failed -> %s",
+             n_ok, n_skip, failed, args.out)
     sys.exit(1 if failed else 0)
 
 

@@ -30,13 +30,13 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import logging
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs import get_config
 from repro.engine import get_engine
 from repro.launch.mesh import make_host_mesh
@@ -44,8 +44,54 @@ from repro.models import build_model
 from repro.models.transformer import encode
 from repro.train import make_serve_step
 
-logging.basicConfig(level=logging.INFO, format="%(message)s")
-log = logging.getLogger("repro.serve")
+# No logging side effects at import time: handlers attach only when
+# main() calls obs.setup_logging() (see repro.obs.logging).
+log = obs.get_logger("serve")
+
+
+def _profile_pass(engine, n_bits: int) -> None:
+    """One real crossbar pass of the serve MAC group, so the exported
+    trace contains the full exec.run -> marshal/pack/kernel/unpack
+    breakdown (the jitted decode loop itself runs the MAC *semantics*
+    inside XLA, not through Executable.run). Only called under --trace,
+    so the untraced serve path pays nothing."""
+    with obs.span("serve.profile_pass", n_bits=n_bits):
+        rows = 8
+        a = np.arange(1, rows + 1, dtype=object)
+        zeros = np.zeros(rows, dtype=object)
+        batch = engine._mac_inputs(n_bits, a, a, zeros, zeros)
+        k = engine.effective_coschedule_k("mac", n_bits)
+        if k >= 2:
+            engine.compile_batch("mac", n_bits, k).run([batch] * k)
+        else:
+            engine.compile("mac", n_bits).run(batch)
+
+
+def _export_waterfalls(engine, plan, n_bits: int) -> None:
+    """Merge modeled-cycle waterfall tracks into the trace: one process
+    row per co-scheduled plan group (fused program occupancy +
+    switching) and one for the LM-head MAC group."""
+    pid = 2
+    seen = set()
+    groups = list(plan.groups) if plan is not None else []
+    for g in groups:
+        gex = g.executable
+        if gex is None or id(gex.program) in seen:
+            continue
+        seen.add(id(gex.program))
+        obs.add_events(obs.waterfall_events(
+            gex.program, packed=gex.packed,
+            name=f"{g.scope}: {gex.program.name}", pid=pid,
+            cycle_ns=engine.crossbar.cycle_ns))
+        pid += 1
+    k = engine.effective_coschedule_k("mac", n_bits)
+    exe = (engine.compile_batch("mac", n_bits, k) if k >= 2
+           else engine.compile("mac", n_bits))
+    if id(exe.program) not in seen:
+        obs.add_events(obs.waterfall_events(
+            exe.program, packed=exe.packed,
+            name=f"lm_head MAC: {exe.program.name}", pid=pid,
+            cycle_ns=engine.crossbar.cycle_ns))
 
 
 def main() -> None:
@@ -78,7 +124,18 @@ def main() -> None:
                          "words — the fast path for wide decode batches) "
                          "or 'pallas:interpret=false' on real TPU; "
                          "default: the engine's numpy reference")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="enable span tracing and write a Chrome "
+                         "trace-event file (open in chrome://tracing or "
+                         "ui.perfetto.dev) with compile/cache/execute "
+                         "spans plus crossbar-waterfall counter tracks")
+    ap.add_argument("--metrics", default=None, metavar="OUT.json",
+                    help="write the obs metrics snapshot (counters, "
+                         "gauges, latency histograms) as JSON")
     args = ap.parse_args()
+    obs.setup_logging()
+    if args.trace:
+        obs.enable()
 
     pim = args.smoke if args.pim is None else args.pim
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -119,8 +176,10 @@ def main() -> None:
             (args.batch, cfg.enc_frames, cfg.d_model)), jnp.float32)
         states["enc_out"] = encode(cfg, params, frames)
     t0 = time.time()
-    logits, states = model.forward(params, prompts, states=states)
-    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    with obs.span("serve.prefill", batch=args.batch,
+                  prompt_len=args.prompt_len):
+        logits, states = model.forward(params, prompts, states=states)
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
     log.info("prefill %d x %d: %.2fs", args.batch, args.prompt_len,
              time.time() - t0)
 
@@ -134,16 +193,28 @@ def main() -> None:
     # steady-state decode must stay recompile-free.
     pre = engine.stats()
     out = [np.asarray(tok)]
+    tok_lat = obs.histogram("serve.token_latency_us")
     t0 = time.time()
     for t in range(args.gen - 1):
-        pos = jnp.full((args.batch, 1), args.prompt_len + t, jnp.int32)
-        tok, states = jit_serve(params, states, tok, pos)
-        out.append(np.asarray(tok))
+        s0 = time.perf_counter()
+        with obs.span("serve.decode_step", step=t):
+            pos = jnp.full((args.batch, 1), args.prompt_len + t, jnp.int32)
+            tok, states = jit_serve(params, states, tok, pos)
+            out.append(np.asarray(tok))    # device sync: real step time
+        tok_lat.observe((time.perf_counter() - s0) * 1e6)
     dt = time.time() - t0
     post = engine.stats()
     gen = np.concatenate(out, axis=1)
     log.info("generated %d x %d tokens in %.2fs (%.1f tok/s/seq)",
              args.batch, args.gen, dt, (args.gen - 1) / max(dt, 1e-9))
+    if args.gen > 1:
+        log.info("decode latency/token: p50=%.1fus p90=%.1fus p99=%.1fus",
+                 tok_lat.percentile(0.50), tok_lat.percentile(0.90),
+                 tok_lat.percentile(0.99))
+    obs.gauge("serve.tokens_per_sec").set((args.gen - 1) / max(dt, 1e-9))
+    obs.gauge("serve.cache_hits").set(post["hits"])
+    obs.gauge("serve.cache_misses").set(post["misses"])
+    obs.gauge("serve.engine_runs").set(post["runs"])
     log.info("sample: %s", gen[0][:16].tolist())
     if pim:
         recompiles = post["compiles"] - pre["compiles"]
@@ -205,6 +276,17 @@ def main() -> None:
                      "layouts reused across all %d decode steps",
                      f"{plan.cycles_per_token:,}", us,
                      engine.crossbar.cycle_ns, args.gen - 1)
+            obs.gauge("serve.cycles_per_token").set(plan.cycles_per_token)
+
+    if args.trace:
+        if pim:
+            _profile_pass(engine, cfg.pim_linear_bits)
+            _export_waterfalls(engine, plan, cfg.pim_linear_bits)
+        n_ev = obs.export_trace(args.trace)
+        log.info("trace: %d events -> %s", n_ev, args.trace)
+    if args.metrics:
+        obs.write_metrics(args.metrics)
+        log.info("metrics snapshot -> %s", args.metrics)
 
 
 if __name__ == "__main__":

@@ -14,12 +14,12 @@ from __future__ import annotations
 
 import argparse
 import json
-import logging
 import time
 
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.configs import get_config
 from repro.data import DataConfig, make_batch_fn
 from repro.launch.mesh import make_host_mesh
@@ -28,8 +28,9 @@ from repro.optim import AdamWConfig
 from repro.train import (RetryingRunner, latest_step, make_train_step,
                          restore_checkpoint)
 
-logging.basicConfig(level=logging.INFO, format="%(message)s")
-log = logging.getLogger("repro.train")
+# No logging side effects at import time: handlers attach only when
+# main() calls obs.setup_logging() (see repro.obs.logging).
+log = obs.get_logger("train")
 
 
 def main() -> None:
@@ -49,7 +50,15 @@ def main() -> None:
     ap.add_argument("--log-file", default="")
     ap.add_argument("--override", default="",
                     help="JSON dict of ModelConfig overrides")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="enable span tracing and write a Chrome "
+                         "trace-event file at exit")
+    ap.add_argument("--metrics", default=None, metavar="OUT.json",
+                    help="write the obs metrics snapshot as JSON")
     args = ap.parse_args()
+    obs.setup_logging()
+    if args.trace:
+        obs.enable()
 
     cfg = get_config(args.arch, smoke=args.smoke)
     if args.override:
@@ -99,20 +108,33 @@ def main() -> None:
             (params, opt_state, resid), start, args.steps - start)
         log.info("done: %s (%.1fs)", metrics, time.time() - t0)
     else:
+        step_ms = obs.histogram("train.step_ms")
         for step in range(start, args.steps):
             t0 = time.time()
-            params, opt_state, resid, met = jit_step(params, opt_state,
-                                                     resid, batch_fn(step))
-            loss = float(met["loss"])
+            with obs.span("train.step", step=step):
+                params, opt_state, resid, met = jit_step(
+                    params, opt_state, resid, batch_fn(step))
+                loss = float(met["loss"])
             dt = time.time() - t0
+            step_ms.observe(dt * 1e3)
             if step % 10 == 0 or step == args.steps - 1:
                 log.info("step %5d loss %.4f  %.2fs/step  %.0f tok/s",
                          step, loss, dt, tokens_per_step / dt)
             if logf:
                 logf.write(f"{step},{loss:.5f},{dt:.3f}\n")
                 logf.flush()
+        obs.gauge("train.tokens_per_sec").set(
+            tokens_per_step / max(step_ms.mean / 1e3, 1e-9)
+            if step_ms.count else 0.0)
     if logf:
         logf.close()
+
+    if args.trace:
+        n_ev = obs.export_trace(args.trace)
+        log.info("trace: %d events -> %s", n_ev, args.trace)
+    if args.metrics:
+        obs.write_metrics(args.metrics)
+        log.info("metrics snapshot -> %s", args.metrics)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,110 @@
+"""repro.obs — zero-dependency observability for the whole stack.
+
+Three pieces, one import surface:
+
+* **Spans** (:mod:`.trace`) — ``with obs.span("compile.fuse", op=...):``
+  wall-time intervals from the compiler, cache, engine, executors, and
+  serve loop, exported as Chrome trace-event JSON
+  (``obs.export_trace(path)``; open in chrome://tracing or Perfetto).
+  Disabled by default and near-free when disabled.
+* **Metrics** (:mod:`.metrics`) — process-wide counters / gauges /
+  streaming histograms; ``obs.dump()`` snapshots everything (a superset
+  of ``Engine.stats()``), ``obs.write_metrics(path)`` saves it.
+  Always on: recording a counter or latency sample is cheap enough to
+  not need a switch.
+* **Waterfall** (:mod:`.waterfall`) — modeled-cycle counter tracks
+  (partition occupancy, gate activity, switching) derived from compiled
+  programs, merged into the same trace file; plus the
+  ``energy_proxy`` switching-activity scalar on ``ExecCost``.
+
+Import layering: ``repro.obs`` depends only on :mod:`repro.core` — the
+compiler/engine/pim layers all import it, so it must sit below them.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from .logging import get_logger, setup_logging
+from .metrics import (Counter, Gauge, Histogram, Registry, get_registry)
+from .trace import NULL_SPAN, PID_SPANS, Span, Tracer, get_tracer
+from .waterfall import (cycle_occupancy, switching_activity,
+                        switching_profile, waterfall_events)
+
+__all__ = [
+    # trace
+    "span", "instant", "enable", "disable", "enabled", "reset_trace",
+    "add_events", "export_trace", "get_tracer", "Tracer", "Span",
+    "NULL_SPAN", "PID_SPANS",
+    # metrics
+    "counter", "gauge", "histogram", "dump", "write_metrics",
+    "reset_metrics", "get_registry", "Registry", "Counter", "Gauge",
+    "Histogram",
+    # waterfall
+    "cycle_occupancy", "switching_profile", "switching_activity",
+    "waterfall_events",
+    # logging
+    "setup_logging", "get_logger",
+]
+
+
+# --------------------------------------------------------------- spans ----
+def span(name: str, cat: str = "repro", **args):
+    """Module-level alias for ``get_tracer().span(...)`` — the form
+    instrumented code uses. One attribute check when tracing is off."""
+    t = get_tracer()
+    if not t.enabled:
+        return NULL_SPAN
+    return t.span(name, cat, **args)
+
+
+def instant(name: str, cat: str = "repro", **args) -> None:
+    get_tracer().instant(name, cat, **args)
+
+
+def enable() -> None:
+    get_tracer().enable()
+
+
+def disable() -> None:
+    get_tracer().disable()
+
+
+def enabled() -> bool:
+    return get_tracer().enabled
+
+
+def reset_trace() -> None:
+    get_tracer().reset()
+
+
+def add_events(events) -> None:
+    get_tracer().add_events(events)
+
+
+def export_trace(path: str) -> int:
+    return get_tracer().export(path)
+
+
+# ------------------------------------------------------------- metrics ----
+def counter(name: str) -> Counter:
+    return get_registry().counter(name)
+
+
+def gauge(name: str) -> Gauge:
+    return get_registry().gauge(name)
+
+
+def histogram(name: str, cap: int = Histogram.DEFAULT_CAP) -> Histogram:
+    return get_registry().histogram(name, cap)
+
+
+def dump() -> dict:
+    return get_registry().dump()
+
+
+def write_metrics(path: str, extra: Optional[dict] = None) -> dict:
+    return get_registry().write(path, extra)
+
+
+def reset_metrics() -> None:
+    get_registry().reset()

@@ -1,0 +1,220 @@
+"""Metrics registry: counters, gauges, streaming histograms (zero deps).
+
+One process-wide :class:`Registry` aggregates what the stack is doing —
+program-cache hits/misses/compiles/verifies, engine runs, per-token
+serve latency — and snapshots to JSON (:meth:`Registry.dump`). This
+subsumes and extends :meth:`repro.engine.Engine.stats`: the cache and
+engine still keep their own counters for back-compat, but the same
+events also land here, next to timing histograms only this layer holds.
+
+Instruments are get-or-create by name and **keep their identity for the
+process lifetime** (``reset()`` zeroes values without discarding
+instruments), so call sites may cache a reference and increment
+lock-cheap on the hot path. Histograms are streaming: exact
+count/sum/min/max plus a bounded reservoir (deterministic per-name RNG)
+for percentiles — exact below the reservoir cap, a uniform sample
+above it. Percentiles use the nearest-rank definition:
+``p(q) = sorted(sample)[ceil(q * len) - 1]``.
+"""
+from __future__ import annotations
+
+import json
+import math
+import random
+import threading
+from typing import Dict, List, Optional
+
+__all__ = ["Counter", "Gauge", "Histogram", "Registry", "get_registry"]
+
+
+class Counter:
+    """Monotonic counter."""
+
+    __slots__ = ("name", "_lock", "_v")
+
+    def __init__(self, name: str):
+        self.name = name
+        self._lock = threading.Lock()
+        self._v = 0
+
+    def inc(self, n: int = 1) -> None:
+        with self._lock:
+            self._v += n
+
+    @property
+    def value(self) -> int:
+        return self._v
+
+    def _reset(self) -> None:
+        with self._lock:
+            self._v = 0
+
+
+class Gauge:
+    """Last-write-wins value."""
+
+    __slots__ = ("name", "_v")
+
+    def __init__(self, name: str):
+        self.name = name
+        self._v = 0.0
+
+    def set(self, v: float) -> None:
+        self._v = float(v)
+
+    @property
+    def value(self) -> float:
+        return self._v
+
+    def _reset(self) -> None:
+        self._v = 0.0
+
+
+class Histogram:
+    """Streaming histogram with reservoir-sampled percentiles."""
+
+    DEFAULT_CAP = 4096
+
+    __slots__ = ("name", "cap", "_lock", "_rng", "count", "total",
+                 "_min", "_max", "_sample")
+
+    def __init__(self, name: str, cap: int = DEFAULT_CAP):
+        self.name = name
+        self.cap = cap
+        self._lock = threading.Lock()
+        # Deterministic per-name reservoir so repeated runs of the same
+        # workload snapshot identical percentiles.
+        self._rng = random.Random(name)
+        self.count = 0
+        self.total = 0.0
+        self._min = math.inf
+        self._max = -math.inf
+        self._sample: List[float] = []
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        with self._lock:
+            self.count += 1
+            self.total += v
+            if v < self._min:
+                self._min = v
+            if v > self._max:
+                self._max = v
+            if len(self._sample) < self.cap:
+                self._sample.append(v)
+            else:
+                j = self._rng.randrange(self.count)
+                if j < self.cap:
+                    self._sample[j] = v
+
+    def percentile(self, q: float) -> float:
+        """Nearest-rank percentile over the retained sample (exact while
+        ``count <= cap``). ``q`` in [0, 1]; NaN when empty."""
+        with self._lock:
+            xs = sorted(self._sample)
+        if not xs:
+            return math.nan
+        i = max(0, min(len(xs) - 1, math.ceil(q * len(xs)) - 1))
+        return xs[i]
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.count if self.count else math.nan
+
+    def snapshot(self) -> Dict[str, float]:
+        return {
+            "count": self.count,
+            "sum": self.total,
+            "mean": self.mean,
+            "min": self._min if self.count else math.nan,
+            "max": self._max if self.count else math.nan,
+            "p50": self.percentile(0.50),
+            "p90": self.percentile(0.90),
+            "p99": self.percentile(0.99),
+        }
+
+    def _reset(self) -> None:
+        with self._lock:
+            self._rng = random.Random(self.name)
+            self.count = 0
+            self.total = 0.0
+            self._min = math.inf
+            self._max = -math.inf
+            self._sample = []
+
+
+class Registry:
+    """Named instrument store with a JSON snapshot."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._counters: Dict[str, Counter] = {}
+        self._gauges: Dict[str, Gauge] = {}
+        self._hists: Dict[str, Histogram] = {}
+
+    def counter(self, name: str) -> Counter:
+        with self._lock:
+            c = self._counters.get(name)
+            if c is None:
+                c = self._counters[name] = Counter(name)
+            return c
+
+    def gauge(self, name: str) -> Gauge:
+        with self._lock:
+            g = self._gauges.get(name)
+            if g is None:
+                g = self._gauges[name] = Gauge(name)
+            return g
+
+    def histogram(self, name: str, cap: int = Histogram.DEFAULT_CAP
+                  ) -> Histogram:
+        with self._lock:
+            h = self._hists.get(name)
+            if h is None:
+                h = self._hists[name] = Histogram(name, cap)
+            return h
+
+    def dump(self) -> Dict:
+        """JSON-ready snapshot of every instrument."""
+        with self._lock:
+            counters = dict(self._counters)
+            gauges = dict(self._gauges)
+            hists = dict(self._hists)
+        return {
+            "counters": {k: c.value for k, c in sorted(counters.items())},
+            "gauges": {k: g.value for k, g in sorted(gauges.items())},
+            "histograms": {k: h.snapshot()
+                           for k, h in sorted(hists.items())},
+        }
+
+    def write(self, path: str, extra: Optional[Dict] = None) -> Dict:
+        """Write ``dump()`` (merged with ``extra``) to ``path``."""
+        doc = self.dump()
+        if extra:
+            doc.update(extra)
+        with open(path, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True, default=str)
+        return doc
+
+    def reset(self) -> None:
+        """Zero every instrument **without** discarding it, so cached
+        references at call sites stay live."""
+        with self._lock:
+            instruments = (list(self._counters.values())
+                           + list(self._gauges.values())
+                           + list(self._hists.values()))
+        for inst in instruments:
+            inst._reset()
+
+
+_GLOBAL: Optional[Registry] = None
+_GLOBAL_LOCK = threading.Lock()
+
+
+def get_registry() -> Registry:
+    global _GLOBAL
+    if _GLOBAL is None:
+        with _GLOBAL_LOCK:
+            if _GLOBAL is None:
+                _GLOBAL = Registry()
+    return _GLOBAL

@@ -25,6 +25,7 @@ import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
+from repro import obs
 from repro.core.costmodel import CrossbarSpec, gemm_cost
 
 __all__ = ["GemmShape", "PIMPlan", "plan_model", "BlockLinear",
@@ -180,6 +181,12 @@ class LinearGroup:
     cols_used: int
     n_bits: int
     staging_cycles: int
+    # The compiled GroupedExecutable behind this group (None for plans
+    # built without an engine pass, e.g. deserialized metrics). Serve's
+    # --trace path reads its fused program/packed tables to emit the
+    # crossbar-waterfall tracks; excluded from repr to keep summaries
+    # readable.
+    executable: Optional[object] = field(default=None, repr=False)
 
     @property
     def macs_per_pass(self) -> int:
@@ -305,29 +312,34 @@ def plan_block(cfg, engine=None,
     scopes = cfg.pim_scopes() if scopes is None else scopes
     n = cfg.pim_linear_bits
     plan = BlockPlan(n_bits=n)
-    linears = block_linears(cfg)
-    mac_cols = eng.compile("mac", n).program.layout.n_cols
-    per_group = max(1, (eng.crossbar.cols or 1 << 30) // mac_cols)
-    for scope in scopes:
-        members = [l for l in linears if l.scope == scope]
-        if not members:
-            continue
-        # A scope with more linears than the crossbar holds MAC copies
-        # splits into several passes-sharing groups (first-fit, in
-        # inventory order so a layer's w1/w3/w2 stay together).
-        for lo in range(0, len(members), per_group):
-            part = members[lo:lo + per_group]
-            base = [GroupSpec("mac", n, label=l.name) for l in part]
-            chains = eng.group_counts(base,
-                                      weights=[l.stream for l in part])
-            gex = eng.compile_group(
-                [GroupSpec("mac", n, copies=c, label=l.name)
-                 for l, c in zip(part, chains)])
-            plan.groups.append(LinearGroup(
-                scope=scope, linears=part, chains=chains,
-                pass_cycles=gex.n_cycles,
-                cols_used=sum(p.n_cols for p in gex.placements),
-                n_bits=n, staging_cycles=STAGING_CYCLES(n)))
+    with obs.span("plan.block", n_bits=n, scopes=",".join(scopes)) as sp:
+        linears = block_linears(cfg)
+        mac_cols = eng.compile("mac", n).program.layout.n_cols
+        per_group = max(1, (eng.crossbar.cols or 1 << 30) // mac_cols)
+        for scope in scopes:
+            members = [l for l in linears if l.scope == scope]
+            if not members:
+                continue
+            # A scope with more linears than the crossbar holds MAC
+            # copies splits into several passes-sharing groups
+            # (first-fit, in inventory order so a layer's w1/w3/w2 stay
+            # together).
+            for lo in range(0, len(members), per_group):
+                part = members[lo:lo + per_group]
+                base = [GroupSpec("mac", n, label=l.name) for l in part]
+                chains = eng.group_counts(base,
+                                          weights=[l.stream for l in part])
+                gex = eng.compile_group(
+                    [GroupSpec("mac", n, copies=c, label=l.name)
+                     for l, c in zip(part, chains)])
+                plan.groups.append(LinearGroup(
+                    scope=scope, linears=part, chains=chains,
+                    pass_cycles=gex.n_cycles,
+                    cols_used=sum(p.n_cols for p in gex.placements),
+                    n_bits=n, staging_cycles=STAGING_CYCLES(n),
+                    executable=gex))
+        sp.set(groups=len(plan.groups),
+               cycles_per_token=plan.cycles_per_token)
     return plan
 
 

@@ -1,0 +1,321 @@
+"""repro.obs: span tracer (nesting, threads, disabled overhead, Chrome
+schema), metrics histograms, crossbar waterfall, and the instrumented
+compile/execute path."""
+import json
+import logging
+import math
+import threading
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core.baselines import rime_multiplier
+from repro.core.executor import pack_program
+from repro.obs.trace import NULL_SPAN, Tracer
+
+pytestmark = pytest.mark.core
+
+
+@pytest.fixture()
+def global_tracer():
+    """Enable the process-wide tracer for one test, then restore the
+    disabled-and-empty default so other tests see no overhead/events."""
+    t = obs.get_tracer()
+    t.reset()
+    t.enable()
+    yield t
+    t.disable()
+    t.reset()
+
+
+# ------------------------------------------------------------ tracer ----
+def test_disabled_span_is_shared_null_span():
+    """Disabled tracing must not allocate: every span() call returns the
+    one NULL_SPAN singleton and records nothing."""
+    t = Tracer()
+    assert t.span("a") is NULL_SPAN
+    assert t.span("b", op="multpim", n=16) is NULL_SPAN
+    with t.span("c") as sp:
+        sp.set(x=1)               # no-op, must not raise
+    t.instant("d")
+    assert len(t) == 0
+    # module-level form against the (disabled) global tracer
+    assert not obs.enabled()
+    assert obs.span("e") is NULL_SPAN
+
+
+def test_span_nesting_and_attrs():
+    t = Tracer(enabled=True)
+    with t.span("outer", op="mul") as outer:
+        with t.span("inner"):
+            pass
+        outer.set(cycles=291)
+    evs = t.trace_dict()["traceEvents"]
+    spans = {e["name"]: e for e in evs if e["ph"] == "X"}
+    assert set(spans) == {"outer", "inner"}
+    o, i = spans["outer"], spans["inner"]
+    # inner is contained in outer on the timeline
+    assert o["ts"] <= i["ts"]
+    assert i["ts"] + i["dur"] <= o["ts"] + o["dur"] + 1e-6
+    assert o["args"] == {"op": "mul", "cycles": 291}
+    # numpy scalars degrade to plain numbers in args
+    with t.span("np", v=np.int64(7), f=np.float32(0.5)):
+        pass
+    ev = [e for e in t.trace_dict()["traceEvents"]
+          if e.get("name") == "np"][0]
+    assert ev["args"]["v"] == 7
+    assert isinstance(ev["args"]["v"], int)
+
+
+def test_tracer_thread_safety():
+    t = Tracer(enabled=True)
+    n_threads, per_thread = 8, 50
+    # Barrier: all threads alive at once, so idents are distinct (the
+    # OS reuses the ident of a terminated thread).
+    gate = threading.Barrier(n_threads)
+
+    def work():
+        gate.wait()
+        for k in range(per_thread):
+            with t.span("w", k=k):
+                pass
+
+    threads = [threading.Thread(target=work) for _ in range(n_threads)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert len(t) == n_threads * per_thread
+    tids = {e["tid"] for e in t.trace_dict()["traceEvents"]
+            if e["ph"] == "X"}
+    assert len(tids) == n_threads
+
+
+def test_chrome_trace_schema(tmp_path):
+    t = Tracer(enabled=True)
+    with t.span("compile", op="multpim"):
+        pass
+    t.instant("mark")
+    t.add_events([{"name": "occupancy", "ph": "C", "ts": 0.0, "pid": 2,
+                   "args": {"ops": 3}}])
+    path = tmp_path / "trace.json"
+    n = t.export(str(path))
+    doc = json.loads(path.read_text())      # must be valid JSON
+    assert doc["displayTimeUnit"] == "ms"
+    evs = doc["traceEvents"]
+    assert len(evs) == n == 4               # meta + span + instant + counter
+    meta = evs[0]
+    assert meta["ph"] == "M" and meta["name"] == "process_name"
+    for e in evs:
+        assert e["ph"] in ("M", "X", "i", "C")
+        assert isinstance(e["pid"], int)
+        if e["ph"] == "X":
+            assert e["ts"] >= 0 and e["dur"] >= 0
+
+
+def test_add_events_while_disabled():
+    """Waterfall tracks are injected at export time, possibly after the
+    tracer was switched off — raw events must still land."""
+    t = Tracer()
+    t.add_events([{"name": "x", "ph": "C", "ts": 0, "pid": 2, "args": {}}])
+    assert len(t) == 1
+
+
+# ----------------------------------------------------------- metrics ----
+def test_histogram_nearest_rank_percentiles():
+    h = obs.Histogram("t")
+    for v in range(1, 11):
+        h.observe(v)
+    assert h.percentile(0.50) == 5
+    assert h.percentile(0.90) == 9
+    assert h.percentile(0.99) == 10
+    assert h.count == 10 and h.total == 55 and h.mean == 5.5
+    snap = h.snapshot()
+    assert snap["min"] == 1 and snap["max"] == 10
+    assert snap["p50"] == 5 and snap["p90"] == 9 and snap["p99"] == 10
+    assert math.isnan(obs.Histogram("empty").percentile(0.5))
+
+
+def test_histogram_reservoir_bounded():
+    h = obs.Histogram("r", cap=64)
+    for v in range(1000):
+        h.observe(v)
+    assert len(h._sample) == 64            # bounded memory
+    assert h.count == 1000                 # exact count survives
+    assert h._min == 0 and h._max == 999
+    # the sampled p50 stays near the true median
+    assert 250 <= h.percentile(0.5) <= 750
+
+
+def test_registry_identity_and_reset():
+    reg = obs.Registry()
+    c = reg.counter("hits")
+    c.inc(3)
+    assert reg.counter("hits") is c        # get-or-create
+    g = reg.gauge("tps")
+    g.set(12.5)
+    h = reg.histogram("lat")
+    h.observe(1.0)
+    d = reg.dump()
+    assert d["counters"]["hits"] == 3
+    assert d["gauges"]["tps"] == 12.5
+    assert d["histograms"]["lat"]["count"] == 1
+    reg.reset()
+    assert reg.counter("hits") is c        # identity preserved...
+    assert c.value == 0                    # ...values zeroed
+    assert reg.histogram("lat").count == 0
+
+
+def test_registry_write(tmp_path):
+    reg = obs.Registry()
+    reg.counter("a").inc()
+    path = tmp_path / "m.json"
+    doc = reg.write(str(path), extra={"run": "test"})
+    on_disk = json.loads(path.read_text())
+    assert on_disk["counters"]["a"] == 1 == doc["counters"]["a"]
+    assert on_disk["run"] == "test"
+
+
+# --------------------------------------------------------- waterfall ----
+def test_cycle_occupancy_matches_program_spans():
+    """Occupancy series agree with spans recomputed straight from the
+    Program IR (the same geometry Program.validate checks)."""
+    prog = rime_multiplier(8)
+    occ = obs.cycle_occupancy(prog)
+    T = prog.n_cycles
+    assert all(len(occ[k]) == T for k in occ)
+    lay = prog.layout
+    for t, cyc in enumerate(prog.cycles):
+        if cyc.is_init:
+            assert occ["init"][t] == 1 and occ["ops"][t] == 0
+            assert occ["cols_written"][t] == len(cyc.init_cells)
+            parts = {lay.partition_of(c) for c in cyc.init_cells}
+            assert occ["partitions_busy"][t] == len(parts)
+        else:
+            assert occ["init"][t] == 0
+            assert occ["ops"][t] == len(cyc.ops)
+            assert occ["cols_written"][t] == len({op.out for op in cyc.ops})
+            width = 0
+            for op in cyc.ops:
+                ps = [lay.partition_of(c) for c in op.cols]
+                width += max(ps) - min(ps) + 1
+            assert occ["partitions_busy"][t] == width
+    # a multiplier does real work: some cycle issues >1 op in parallel
+    assert max(occ["ops"]) >= 1 and sum(occ["cols_written"]) > 0
+
+
+def test_switching_profile_deterministic_and_guarded():
+    packed = pack_program(rime_multiplier(4))
+    p1 = obs.switching_profile(packed)
+    p2 = obs.switching_profile(packed)
+    assert np.array_equal(p1, p2)
+    assert p1.shape == (packed.n_cycles,)
+    assert (p1 >= 0).all() and p1.sum() > 0
+    with pytest.raises(ValueError):
+        obs.switching_profile(packed, rows=100)   # not a multiple of 64
+    # different seed -> same shape, (almost surely) different profile
+    p3 = obs.switching_profile(packed, seed=1)
+    assert p3.shape == p1.shape
+
+
+def test_switching_activity_memoized():
+    packed = pack_program(rime_multiplier(4))
+    v1 = obs.switching_activity(packed)
+    assert v1 > 0
+    memo = packed._energy_proxy
+    assert memo == ((64, 0), v1)
+    assert obs.switching_activity(packed) == v1
+    assert packed._energy_proxy is memo         # cache hit, not recompute
+
+
+def test_exec_cost_energy_proxy():
+    from repro.engine import get_engine
+    cost = get_engine().compile("multpim", 8).cost()
+    assert cost.energy_proxy is not None and cost.energy_proxy > 0
+
+
+def test_waterfall_events_schema():
+    prog = rime_multiplier(4)
+    packed = pack_program(prog)
+    evs = obs.waterfall_events(prog, packed=packed, name="rime N=4", pid=3)
+    assert evs[0]["ph"] == "M"
+    assert "rime N=4" in evs[0]["args"]["name"]
+    occ_evs = [e for e in evs if e.get("name") == "occupancy"]
+    sw_evs = [e for e in evs if e.get("name") == "switching"]
+    T = prog.n_cycles
+    assert len(occ_evs) == len(sw_evs) == T + 1
+    assert all(e["ph"] == "C" and e["pid"] == 3 for e in occ_evs + sw_evs)
+    # trailing sample closes every series at zero
+    assert set(occ_evs[-1]["args"].values()) == {0}
+    assert sw_evs[-1]["args"]["bit_flips_per_row"] == 0.0
+    # counter series agree with the occupancy computation
+    occ = obs.cycle_occupancy(prog)
+    assert [e["args"]["ops"] for e in occ_evs[:-1]] == occ["ops"]
+    # modeled time axis: cycle t at t * cycle_ns (ts in us)
+    assert occ_evs[1]["ts"] == pytest.approx(10.0 / 1e3)
+
+
+# --------------------------------------- instrumented compile/execute ----
+def test_instrumented_engine_emits_expected_spans(global_tracer):
+    from repro.compiler import ProgramCache
+    from repro.engine import Engine
+
+    eng = Engine(cache=ProgramCache(use_disk=False))
+    exe = eng.compile("multpim", 4)
+    rng = np.random.default_rng(0)
+    batch = {"a": rng.integers(0, 16, 8), "b": rng.integers(0, 16, 8)}
+    exe.run(batch)
+    names = {e["name"] for e in global_tracer.trace_dict()["traceEvents"]}
+    for expect in ("engine.compile", "cache.compile", "compile.build",
+                   "compile.optimize", "compile.pack", "exec.run",
+                   "exec.marshal", "exec.unmarshal", "backend.kernel"):
+        assert expect in names, f"missing span {expect}"
+    # second compile is a cache hit: no new cache.compile span
+    n_compiles = sum(1 for e in global_tracer.trace_dict()["traceEvents"]
+                     if e["name"] == "cache.compile")
+    eng.compile("multpim", 4)
+    assert sum(1 for e in global_tracer.trace_dict()["traceEvents"]
+               if e["name"] == "cache.compile") == n_compiles
+    assert obs.counter("cache.memory_hit").value >= 1
+
+
+def test_instrumentation_silent_when_disabled():
+    from repro.compiler import ProgramCache
+    from repro.engine import Engine
+
+    t = obs.get_tracer()
+    t.reset()
+    assert not t.enabled
+    eng = Engine(cache=ProgramCache(use_disk=False))
+    exe = eng.compile("multpim", 4)
+    exe.run({"a": np.arange(8), "b": np.arange(8)})
+    assert len(t) == 0
+
+
+# ----------------------------------------------------------- logging ----
+def test_setup_logging_idempotent_and_scoped():
+    root_before = list(logging.getLogger().handlers)
+    obs.setup_logging()
+    obs.setup_logging()                     # second call must not stack
+    repro_log = logging.getLogger("repro")
+    marked = [h for h in repro_log.handlers
+              if getattr(h, "_repro_obs_handler", False)]
+    assert len(marked) == 1
+    assert repro_log.propagate is False
+    # the root logger is never touched
+    assert logging.getLogger().handlers == root_before
+    assert obs.get_logger("serve").name == "repro.serve"
+
+
+def test_launch_imports_do_not_configure_logging():
+    """Importing the launch drivers must leave global logging alone —
+    handlers attach only when a main() calls obs.setup_logging()."""
+    import importlib
+
+    root_before = list(logging.getLogger().handlers)
+    import repro.launch.serve as serve
+    import repro.launch.train as train
+    importlib.reload(train)
+    importlib.reload(serve)
+    assert logging.getLogger().handlers == root_before
