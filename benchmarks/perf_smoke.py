@@ -16,7 +16,13 @@ sides of a ratio move with the machine, so no tolerance is defensible.
   PYTHONPATH=src python -m benchmarks.perf_smoke                 # gate
   PYTHONPATH=src python -m benchmarks.perf_smoke --write-baseline
 
-Baseline lives at ``benchmarks/baseline_pr6.json``; regenerate it (and
+The serve-load scenario (seeded Poisson trace through the
+:mod:`repro.serve` continuous batcher, replayed continuous vs serial)
+contributes ``wall_`` per-token throughput/latency metrics and hard
+in-process asserts: zero recompiles after warmup and bit-identical
+tokens across schedules.
+
+Baseline lives at ``benchmarks/baseline_pr7.json``; regenerate it (and
 review the diff!) whenever a change legitimately improves or trades off
 these numbers.
 """
@@ -28,7 +34,7 @@ import os
 import sys
 
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__),
-                                "baseline_pr6.json")
+                                "baseline_pr7.json")
 TOLERANCE = 0.05          # >5% regression fails (deterministic cycles)
 WALL_PREFIX = "wall_"     # wall-clock: gated, but loosely
 WALL_TOLERANCE = 1.0      # >2x regression fails (absorbs runner noise)
@@ -85,6 +91,21 @@ def collect_metrics(n: int = 8, k: int = 4, n_elems: int = 8) -> dict:
               "b": rng.integers(0, 1 << 16, rows)}
     wall = time_backends(exe, tbatch, ("jax", "jax:pack=true",
                                        "numpy:pack=true"))
+
+    # Serve load scenario (~2s): seeded Poisson trace through the
+    # continuous batcher, replayed under continuous and serial
+    # scheduling on the packed numpy backend. Correctness invariants
+    # (zero recompiles after warmup, bit-identical tokens across
+    # schedules) assert hard here; throughput/latency gate as wall_*.
+    from repro.serve import TrafficConfig, compare_modes, generate
+    tcfg = TrafficConfig(n_requests=32, rate=500.0, n_bits=n, seed=0)
+    res = compare_modes(eng, generate(tcfg), backend="numpy:pack=true")
+    cont = res["continuous"]
+    assert cont.recompiles == 0, \
+        f"serve steady state recompiled {cont.recompiles}x"
+    assert res["tokens_match"], \
+        "continuous vs serial scheduling changed emitted tokens"
+
     return {
         # lower is better for every metric here
         f"cycles_per_mac_seq_n{n}": cyc_seq / n_elems,
@@ -106,9 +127,14 @@ def collect_metrics(n: int = 8, k: int = 4, n_elems: int = 8) -> dict:
             wall["jax:pack=true"] * 1e6 / (rows / 1e3),
         "wall_us_per_1k_states_numpy_packed":
             wall["numpy:pack=true"] * 1e6 / (rows / 1e3),
-        # informational ratio (never gated, never in the baseline)
+        "wall_us_per_token_serve_continuous":
+            cont.wall_s * 1e6 / max(1, cont.n_tokens),
+        "wall_serve_p99_token_latency_us":
+            cont.token_latency_us.get("p99", 0.0),
+        # informational ratios (never gated, never in the baseline)
         "info_packed_speedup_vs_jax":
             wall["jax"] / wall["jax:pack=true"],
+        "info_serve_speedup_vs_serial": res["speedup"],
     }
 
 

@@ -2,7 +2,7 @@
 
 Prints ``name,us_per_call,derived`` CSV (the harness contract) and, so
 the perf trajectory is tracked across PRs, writes a machine-readable
-JSON (``--json``, default ``BENCH_pr6.json``) mapping each section to
+JSON (``--json``, default ``BENCH_pr7.json``) mapping each section to
 its rows::
 
     {"sections": {"table1": [[name, us_per_call, derived], ...], ...},
@@ -10,8 +10,9 @@ its rows::
 
   PYTHONPATH=src python -m benchmarks.run [--section table1|table2|table3|
                                            fa|opt|sim|throughput|block_pim|
-                                           obs|roofline|all|sec1,sec2,...]
-                                          [--json BENCH_pr6.json|off]
+                                           serve_load|obs|roofline|all|
+                                           sec1,sec2,...]
+                                          [--json BENCH_pr7.json|off]
                                           [--trace OUT.json]
                                           [--metrics OUT.json]
 """
@@ -26,7 +27,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--section", default="all")
     ap.add_argument("--dryrun-json", default="dryrun_results.json")
-    ap.add_argument("--json", default="BENCH_pr6.json",
+    ap.add_argument("--json", default="BENCH_pr7.json",
                     help="machine-readable output path ('off' disables)")
     ap.add_argument("--trace", default=None, metavar="OUT.json",
                     help="enable span tracing and write a Chrome "
@@ -52,6 +53,7 @@ def main() -> None:
         "throughput": tables.throughput,
         "pim_plan": tables.pim_plan_sweep,
         "block_pim": tables.block_pim_plan,
+        "serve_load": tables.serve_load,
         "energy": tables.energy_table,
         "obs": tables.obs_metrics,
         "roofline": lambda: roofline_rows(args.dryrun_json),

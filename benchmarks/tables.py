@@ -356,6 +356,39 @@ def coschedule_throughput(n: int = 16, n_elems: int = 8, k: int = 4,
     return rows
 
 
+def serve_load(n_requests: int = 32, rate: float = 500.0,
+               n_bits: int = 8) -> List[Row]:
+    """Continuous-batching serve scheduler under seeded Poisson load
+    (repro.serve): one row per scheduling mode — us/token as the timed
+    column, tokens/sec plus steady-state TTFT / per-token latency
+    percentiles in the derived column — and a speedup row comparing
+    continuous batching against serial one-request-at-a-time replay of
+    the same trace (the acceptance gate watches >= 3x)."""
+    from repro.engine import get_engine
+    from repro.serve import TrafficConfig, compare_modes, generate
+    eng = get_engine()
+    cfg = TrafficConfig(n_requests=n_requests, rate=rate, n_bits=n_bits)
+    res = compare_modes(eng, generate(cfg), backend="numpy:pack=true")
+    rows: List[Row] = []
+    for mode in ("continuous", "serial"):
+        rep = res[mode]
+        s = rep.summary()
+        rows.append((f"serve_load/{mode}/n={n_requests}",
+                     rep.wall_s * 1e6 / max(1, rep.n_tokens),
+                     f"tokens_per_s={s['tokens_per_s']:.1f};"
+                     f"ttft_p50_us={s['ttft_p50_us']:.0f};"
+                     f"ttft_p99_us={s['ttft_p99_us']:.0f};"
+                     f"token_p50_us={s['token_p50_us']:.0f};"
+                     f"token_p99_us={s['token_p99_us']:.0f};"
+                     f"passes={s['passes']};"
+                     f"recompiles={s['recompiles']};"
+                     f"bitexact={s['bit_exact']}"))
+    rows.append((f"serve_load/speedup/n={n_requests}", 0.0,
+                 f"speedup={res['speedup']:.2f}x;"
+                 f"tokens_match={res['tokens_match']}"))
+    return rows
+
+
 def pim_plan_sweep() -> List[Row]:
     """Beyond-paper: Section-VI crossbar offload plan for every assigned
     architecture (per-token serving latency, crossbar count, energy

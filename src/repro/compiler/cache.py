@@ -124,11 +124,22 @@ class ProgramCache:
     def __init__(self, use_disk: bool = True):
         self._entries: Dict[OpSpec, CompiledEntry] = {}
         self._lock = threading.Lock()
+        # Per-key compile/verify serialization (see get_or_compile). A
+        # process touches a handful of distinct OpSpecs, so key locks
+        # are kept for the cache's lifetime — no GC races.
+        self._key_locks: Dict[OpSpec, threading.Lock] = {}
         self.use_disk = use_disk
         self.hits = 0
         self.misses = 0
         self.disk_hits = 0
         self.compiles = 0             # actual build+optimize events
+
+    def _key_lock(self, spec: OpSpec) -> threading.Lock:
+        with self._lock:
+            kl = self._key_locks.get(spec)
+            if kl is None:
+                kl = self._key_locks[spec] = threading.Lock()
+            return kl
 
     def get_or_compile(self, spec_or_kind: Union[OpSpec, str],
                        n: Optional[int] = None, *,
@@ -138,41 +149,60 @@ class ProgramCache:
         spec = _as_spec(spec_or_kind, n, flags, config)
         with self._lock:
             ent = self._entries.get(spec)
-            if ent is not None:
-                self.hits += 1
-            else:
-                self.misses += 1
-        if ent is not None:
-            _MET_MEM_HIT.inc()
-        else:
-            _MET_MISS.inc()
-            ent = self._load_or_compile(spec)
+        if ent is not None and (not verify or ent.verified is not None):
+            # Fast path: verified (or verification not requested) entry
+            # already cached — no key lock on the steady-state hot path.
             with self._lock:
-                ent = self._entries.setdefault(spec, ent)
-        if verify and ent.verified is None:
-            # Verified lazily, once per entry; verify=False requests are
-            # happily served by an already-verified entry. A failed
-            # verification evicts the entry so nothing — including later
-            # verify=False calls — can be served a known-bad program.
-            t0 = time.perf_counter()
-            try:
-                with obs.span("cache.verify", kind=spec.kind, n=spec.n):
-                    ent.verified = verify_or_raise(ent.raw, ent.program)
-            except Exception:
-                _MET_VERIFY_FAIL.inc()
+                self.hits += 1
+            _MET_MEM_HIT.inc()
+            return ent
+
+        # Slow path — compile-miss and/or first verification. Serialized
+        # per OpSpec key: concurrent scheduler threads that miss the same
+        # key must not each build+verify the program (wasted minutes at
+        # large n) nor race each other's disk spill — one thread does the
+        # work, the rest block here and adopt its entry. Distinct keys
+        # still compile fully in parallel.
+        with self._key_lock(spec):
+            with self._lock:
+                ent = self._entries.get(spec)
+                if ent is not None:
+                    self.hits += 1
+                else:
+                    self.misses += 1
+            if ent is not None:
+                _MET_MEM_HIT.inc()
+            else:
+                _MET_MISS.inc()
+                ent = self._load_or_compile(spec)
                 with self._lock:
-                    self._entries.pop(spec, None)
-                raise
-            _MET_VERIFY.inc()
-            _MET_VERIFY_MS.observe((time.perf_counter() - t0) * 1e3)
-            self._spill(spec, ent)
+                    ent = self._entries.setdefault(spec, ent)
+            if verify and ent.verified is None:
+                # Verified lazily, once per entry; verify=False requests
+                # are happily served by an already-verified entry. A
+                # failed verification evicts the entry so nothing —
+                # including later verify=False calls — can be served a
+                # known-bad program.
+                t0 = time.perf_counter()
+                try:
+                    with obs.span("cache.verify", kind=spec.kind,
+                                  n=spec.n):
+                        ent.verified = verify_or_raise(ent.raw, ent.program)
+                except Exception:
+                    _MET_VERIFY_FAIL.inc()
+                    with self._lock:
+                        self._entries.pop(spec, None)
+                    raise
+                _MET_VERIFY.inc()
+                _MET_VERIFY_MS.observe((time.perf_counter() - t0) * 1e3)
+                self._spill(spec, ent)
         return ent
 
     # ------------------------------------------------------- internals ----
     def _load_or_compile(self, spec: OpSpec) -> CompiledEntry:
-        # Compile outside the lock (it can take a while for large n);
-        # racing compiles of the same key are idempotent — first to
-        # finish wins, others adopt it.
+        # Runs under the per-key lock, outside the cache-wide lock (it
+        # can take a while for large n): same-key callers wait and adopt,
+        # different keys compile concurrently.
         if self.use_disk and spec.kind not in _CUSTOM_KINDS:
             from .diskcache import load_entry
             with obs.span("cache.disk_load", kind=spec.kind, n=spec.n):

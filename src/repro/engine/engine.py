@@ -297,6 +297,29 @@ class Engine:
         alloc = PartitionAllocator(max_cols=self.crossbar.cols)
         return alloc.capacity(entry.program)
 
+    def k_ladder(self, op: str = "mac", n: int = 16, *,
+                 max_k: Optional[int] = None,
+                 flags: Optional[Dict] = None,
+                 config: Optional["PassConfig"] = None) -> Tuple[int, ...]:
+        """The discrete co-schedule group sizes a load-driven scheduler
+        may pick from: powers of two up to the crossbar's capacity for
+        this op/width (optionally clamped by ``max_k``). A continuous
+        batcher sizes each pass to the *smallest rung >= live load*, so
+        every width it can ever request is known up front — precompiling
+        the ladder (one memoized fused entry per rung, see
+        :meth:`compile_batch`) makes joining or evicting a sequence a
+        slot-assignment change, never a recompile. Empty when even a
+        single copy exceeds the crossbar."""
+        cap = self.max_coschedule_k(op, n, flags=flags, config=config)
+        if max_k is not None:
+            cap = min(cap, int(max_k))
+        ladder: List[int] = []
+        k = 1
+        while k <= cap:
+            ladder.append(k)
+            k *= 2
+        return tuple(ladder)
+
     def effective_coschedule_k(self, op: str = "mac", n: int = 16,
                                requested: Optional[int] = None, *,
                                flags: Optional[Dict] = None,
@@ -344,6 +367,20 @@ class Engine:
         carry-save form. Returns ``(lo, s_hi, c_hi)`` integer arrays."""
         exe = self.compile("mac", n, backend=backend)
         return self._mac_on(exe, n, a, b, s_i, c_i)
+
+    def mac_inputs(self, n: int, a, b, s_i, c_i) -> Dict[str, np.ndarray]:
+        """Public marshalling helper: one MAC's integer operands
+        (``a*b + s_i + c_i`` in carry-save form, per row) -> the bit
+        planes a compiled ``mac`` program takes. The serve scheduler
+        builds its per-slot operand sets with this."""
+        return self._mac_inputs(n, a, b, s_i, c_i)
+
+    def mac_accumulate(self, n: int, out: Dict[str, np.ndarray]
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+        """Public inverse of :meth:`mac_inputs`: a ``mac`` program's
+        output bit planes -> the next ``(s, c)`` carry-save accumulator
+        state (object-int arrays)."""
+        return self._mac_accumulate(n, out)
 
     def _mac_inputs(self, n: int, a, b, s_i, c_i) -> Dict[str, np.ndarray]:
         """Marshal one MAC's integer operands into the program's bit

@@ -3,6 +3,19 @@
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2-9b --smoke \
       --batch 4 --prompt-len 32 --gen 32 --pim-scope full
 
+Traffic mode (``--traffic N``) skips the model build entirely and runs
+the :mod:`repro.serve` continuous-batching scheduler against a seeded
+Poisson trace of N generate requests — admission control, dynamic-K
+grouped passes, SLO percentiles from :mod:`repro.obs`. With
+``--traffic-compare`` the same trace replays under serial
+one-request-at-a-time scheduling and the driver reports the speedup;
+``--traffic-check X`` turns that into a hard gate (speedup >= X, zero
+recompiles after warmup, bit-identical tokens across schedules):
+
+  PYTHONPATH=src python -m repro.launch.serve --traffic 16 \
+      --pim-backend numpy:pack=true --traffic-check 3.0 \
+      --trace /tmp/serve_load.json --metrics /tmp/serve_load_metrics.json
+
 PIM offload: in smoke mode (or with ``--pim``) the LM-head linear runs
 in PIM mode through the process-shared :class:`repro.engine.Engine` —
 the Section-VI MAC schedule is compiled into the engine's program cache
@@ -94,6 +107,85 @@ def _export_waterfalls(engine, plan, n_bits: int) -> None:
             cycle_ns=engine.crossbar.cycle_ns))
 
 
+def _log_report(rep) -> None:
+    s = rep.summary()
+    log.info("[%s] %d requests, %d tokens in %.3fs -> %.1f tok/s | "
+             "%d passes, recompiles=%d, bit_exact=%s",
+             rep.mode, s["n_requests"], s["n_tokens"], s["wall_s"],
+             s["tokens_per_s"], s["passes"], s["recompiles"],
+             s["bit_exact"])
+    log.info("[%s] steady-state: TTFT p50=%.0fus p99=%.0fus | "
+             "token latency p50=%.0fus p99=%.0fus",
+             rep.mode, s["ttft_p50_us"], s["ttft_p99_us"],
+             s["token_p50_us"], s["token_p99_us"])
+
+
+def _run_traffic(args) -> None:
+    """--traffic mode: continuous-batching load run, no model build."""
+    from repro.engine import get_engine, resolve_backend
+    from repro.pim import plan_serve_slots
+    from repro.serve import (DECODE_ELEMS, TrafficConfig, compare_modes,
+                             generate, run_load)
+    engine = get_engine()
+    if args.pim_backend is not None:
+        engine.backend = resolve_backend(args.pim_backend)
+    n = args.pim_bits
+    elems = args.traffic_elems or DECODE_ELEMS
+    # --pim-k (deprecated) pins the batch width; otherwise the slot
+    # budget comes from the crossbar column budget via the planner.
+    max_slots = args.pim_k if args.pim_k is not None else args.traffic_slots
+    slots = plan_serve_slots(engine, n, max_slots=max_slots)
+    log.info("%s", slots.summary())
+
+    cfg = TrafficConfig(n_requests=args.traffic, rate=args.traffic_rate,
+                        n_bits=n, seed=args.traffic_seed)
+    reqs = generate(cfg)
+    log.info("trace: %d requests over %.3fs (Poisson %.0f req/s, seed %d)",
+             len(reqs), reqs[-1].arrival if reqs else 0.0,
+             args.traffic_rate, args.traffic_seed)
+
+    common = dict(n_bits=n, decode_elems=elems, max_slots=max_slots,
+                  priority=args.traffic_priority)
+    if args.traffic_compare or args.traffic_check is not None:
+        res = compare_modes(engine, reqs, **common)
+        cont, ser = res["continuous"], res["serial"]
+        _log_report(cont)
+        _log_report(ser)
+        log.info("continuous batching speedup: %.2fx over serial "
+                 "(tokens_match=%s)", res["speedup"], res["tokens_match"])
+        obs.gauge("serve.load.speedup").set(res["speedup"])
+        if args.traffic_check is not None:
+            fails = []
+            if res["speedup"] < args.traffic_check:
+                fails.append(f"speedup {res['speedup']:.2f}x < "
+                             f"{args.traffic_check:.2f}x")
+            if cont.recompiles != 0:
+                fails.append(f"recompiles after warmup = {cont.recompiles}")
+            if not res["tokens_match"]:
+                fails.append("token mismatch between schedules")
+            if fails:
+                raise SystemExit("serve load gate FAILED: "
+                                 + "; ".join(fails))
+            log.info("serve load gate passed: %.2fx >= %.2fx, zero "
+                     "recompiles, bit-exact", res["speedup"],
+                     args.traffic_check)
+    else:
+        cont = run_load(engine, reqs, mode="continuous", **common)
+        _log_report(cont)
+    obs.gauge("serve.load.tokens_per_s").set(cont.tokens_per_s)
+    obs.gauge("serve.load.ttft_p99_us").set(
+        cont.ttft_us.get("p99", 0.0))
+    obs.gauge("serve.load.token_p99_us").set(
+        cont.token_latency_us.get("p99", 0.0))
+
+    if args.trace:
+        n_ev = obs.export_trace(args.trace)
+        log.info("trace: %d events -> %s", n_ev, args.trace)
+    if args.metrics:
+        obs.write_metrics(args.metrics)
+        log.info("metrics snapshot -> %s", args.metrics)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma2-9b",
@@ -110,8 +202,13 @@ def main() -> None:
                          "the shared engine (default: on under --smoke)")
     ap.add_argument("--pim-bits", type=int, default=8)
     ap.add_argument("--pim-k", type=int, default=None,
-                    help="co-scheduled MACs per crossbar pass for the "
-                         "PIM LM head (default: engine policy, 4)")
+                    help="DEPRECATED: pin the co-scheduled batch width. "
+                         "Default is load-driven: the serve scheduler "
+                         "sizes each pass to the live batch (dynamic K "
+                         "over the precompiled pow2 ladder); the model "
+                         "path uses the engine's capacity policy. An "
+                         "explicit value logs a deprecation warning and "
+                         "pins the width.")
     ap.add_argument("--pim-scope", choices=["head", "ffn", "full"],
                     default="head",
                     help="how much of each block the PIM engine serves: "
@@ -124,6 +221,35 @@ def main() -> None:
                          "words — the fast path for wide decode batches) "
                          "or 'pallas:interpret=false' on real TPU; "
                          "default: the engine's numpy reference")
+    ap.add_argument("--traffic", type=int, default=None, metavar="N",
+                    help="continuous-batching load mode: serve N "
+                         "synthetic requests (seeded Poisson arrivals) "
+                         "through the repro.serve scheduler instead of "
+                         "building a model")
+    ap.add_argument("--traffic-rate", type=float, default=200.0,
+                    help="Poisson arrival rate, requests/second")
+    ap.add_argument("--traffic-seed", type=int, default=0)
+    ap.add_argument("--traffic-elems", type=int, default=None,
+                    help="decode elements per token (MAC chain length; "
+                         "default repro.serve.DECODE_ELEMS)")
+    ap.add_argument("--traffic-slots", type=int, default=None,
+                    help="clamp the live-sequence slot budget (default: "
+                         "the crossbar column-budget capacity)")
+    ap.add_argument("--traffic-priority", choices=["prefill", "decode"],
+                    default="prefill",
+                    help="admission policy: prefill = backfill freed "
+                         "slots mid-stream (best TTFT); decode = drain "
+                         "the batch before admitting the next wave")
+    ap.add_argument("--traffic-compare", action="store_true",
+                    help="also replay the trace under serial "
+                         "one-request-at-a-time scheduling and report "
+                         "the continuous/serial speedup")
+    ap.add_argument("--traffic-check", type=float, default=None,
+                    metavar="X",
+                    help="hard gate (implies --traffic-compare): exit "
+                         "nonzero unless speedup >= X, recompiles after "
+                         "warmup == 0, and both schedules emit "
+                         "bit-identical tokens")
     ap.add_argument("--trace", default=None, metavar="OUT.json",
                     help="enable span tracing and write a Chrome "
                          "trace-event file (open in chrome://tracing or "
@@ -136,6 +262,16 @@ def main() -> None:
     obs.setup_logging()
     if args.trace:
         obs.enable()
+
+    if args.pim_k is not None:
+        log.warning("--pim-k is deprecated: K is load-driven now (the "
+                    "serve scheduler sizes each pass to the live batch); "
+                    "an explicit --pim-k pins the batch width to %d",
+                    args.pim_k)
+
+    if args.traffic is not None:
+        _run_traffic(args)
+        return
 
     pim = args.smoke if args.pim is None else args.pim
     cfg = get_config(args.arch, smoke=args.smoke)

@@ -25,20 +25,21 @@ from __future__ import annotations
 from typing import Optional
 
 from .logging import get_logger, setup_logging
-from .metrics import (Counter, Gauge, Histogram, Registry, get_registry)
+from .metrics import (Counter, Gauge, Histogram, Registry,
+                      WindowedHistogram, get_registry)
 from .trace import NULL_SPAN, PID_SPANS, Span, Tracer, get_tracer
 from .waterfall import (cycle_occupancy, switching_activity,
                         switching_profile, waterfall_events)
 
 __all__ = [
     # trace
-    "span", "instant", "enable", "disable", "enabled", "reset_trace",
-    "add_events", "export_trace", "get_tracer", "Tracer", "Span",
-    "NULL_SPAN", "PID_SPANS",
+    "span", "instant", "track", "enable", "disable", "enabled",
+    "reset_trace", "add_events", "export_trace", "get_tracer", "Tracer",
+    "Span", "NULL_SPAN", "PID_SPANS",
     # metrics
-    "counter", "gauge", "histogram", "dump", "write_metrics",
-    "reset_metrics", "get_registry", "Registry", "Counter", "Gauge",
-    "Histogram",
+    "counter", "gauge", "histogram", "windowed_histogram", "dump",
+    "write_metrics", "reset_metrics", "get_registry", "Registry",
+    "Counter", "Gauge", "Histogram", "WindowedHistogram",
     # waterfall
     "cycle_occupancy", "switching_profile", "switching_activity",
     "waterfall_events",
@@ -59,6 +60,13 @@ def span(name: str, cat: str = "repro", **args):
 
 def instant(name: str, cat: str = "repro", **args) -> None:
     get_tracer().instant(name, cat, **args)
+
+
+def track(name: str, cat: str = "repro", **values) -> None:
+    """One sample of a wall-time counter track in the exported trace
+    (e.g. ``obs.track("serve.sched", queue_depth=3, live=4)``). Distinct
+    from :func:`counter`, which is the *metrics* counter instrument."""
+    get_tracer().counter(name, cat, **values)
 
 
 def enable() -> None:
@@ -96,6 +104,11 @@ def gauge(name: str) -> Gauge:
 
 def histogram(name: str, cap: int = Histogram.DEFAULT_CAP) -> Histogram:
     return get_registry().histogram(name, cap)
+
+
+def windowed_histogram(name: str, cap: int = Histogram.DEFAULT_CAP
+                       ) -> WindowedHistogram:
+    return get_registry().windowed_histogram(name, cap)
 
 
 def dump() -> dict:

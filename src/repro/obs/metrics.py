@@ -24,7 +24,8 @@ import random
 import threading
 from typing import Dict, List, Optional
 
-__all__ = ["Counter", "Gauge", "Histogram", "Registry", "get_registry"]
+__all__ = ["Counter", "Gauge", "Histogram", "WindowedHistogram",
+           "Registry", "get_registry"]
 
 
 class Counter:
@@ -143,6 +144,84 @@ class Histogram:
             self._sample = []
 
 
+class WindowedHistogram(Histogram):
+    """Histogram that additionally tracks the current *window*: samples
+    since the last :meth:`window` call. The cumulative view (count, sum,
+    percentiles — everything :class:`Histogram` reports) keeps the whole
+    run; ``window()`` snapshots just the interval and resets it, so a
+    load harness can discard warmup (reset the window once steady state
+    begins) and report steady-state p50/p99 that no cold-start sample
+    can skew. Window percentiles are exact up to ``cap`` samples per
+    interval, reservoir-sampled beyond it (own deterministic RNG, so
+    repeated runs snapshot identical windows)."""
+
+    __slots__ = ("_wrng", "_wcount", "_wtotal", "_wmin", "_wmax",
+                 "_wsample")
+
+    def __init__(self, name: str, cap: int = Histogram.DEFAULT_CAP):
+        super().__init__(name, cap)
+        self._wipe_window()
+
+    def _wipe_window(self) -> None:
+        self._wrng = random.Random(self.name + "/window")
+        self._wcount = 0
+        self._wtotal = 0.0
+        self._wmin = math.inf
+        self._wmax = -math.inf
+        self._wsample: List[float] = []
+
+    def observe(self, v: float) -> None:
+        super().observe(v)
+        v = float(v)
+        with self._lock:
+            self._wcount += 1
+            self._wtotal += v
+            if v < self._wmin:
+                self._wmin = v
+            if v > self._wmax:
+                self._wmax = v
+            if len(self._wsample) < self.cap:
+                self._wsample.append(v)
+            else:
+                j = self._wrng.randrange(self._wcount)
+                if j < self.cap:
+                    self._wsample[j] = v
+
+    def window(self, reset: bool = True) -> Dict[str, float]:
+        """Snapshot of the current interval (same fields as
+        :meth:`snapshot`, computed over window samples only), then —
+        unless ``reset=False`` — start a fresh interval. The cumulative
+        histogram is untouched either way."""
+        with self._lock:
+            xs = sorted(self._wsample)
+            count, total = self._wcount, self._wtotal
+            lo = self._wmin if count else math.nan
+            hi = self._wmax if count else math.nan
+            if reset:
+                self._wipe_window()
+
+        def pct(q: float) -> float:
+            if not xs:
+                return math.nan
+            return xs[max(0, min(len(xs) - 1, math.ceil(q * len(xs)) - 1))]
+
+        return {
+            "count": count,
+            "sum": total,
+            "mean": total / count if count else math.nan,
+            "min": lo,
+            "max": hi,
+            "p50": pct(0.50),
+            "p90": pct(0.90),
+            "p99": pct(0.99),
+        }
+
+    def _reset(self) -> None:
+        super()._reset()
+        with self._lock:
+            self._wipe_window()
+
+
 class Registry:
     """Named instrument store with a JSON snapshot."""
 
@@ -172,6 +251,24 @@ class Registry:
             h = self._hists.get(name)
             if h is None:
                 h = self._hists[name] = Histogram(name, cap)
+            return h
+
+    def windowed_histogram(self, name: str,
+                           cap: int = Histogram.DEFAULT_CAP
+                           ) -> WindowedHistogram:
+        """Get-or-create a :class:`WindowedHistogram`. The name is
+        claimed for the windowed variant: asking for a name already held
+        by a plain histogram raises (and vice versa — ``histogram()``
+        happily returns a windowed one, a plain one just never has
+        ``window()``)."""
+        with self._lock:
+            h = self._hists.get(name)
+            if h is None:
+                h = self._hists[name] = WindowedHistogram(name, cap)
+            elif not isinstance(h, WindowedHistogram):
+                raise TypeError(
+                    f"histogram '{name}' already exists without a window; "
+                    f"pick a distinct name for the windowed variant")
             return h
 
     def dump(self) -> Dict:

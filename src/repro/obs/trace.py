@@ -141,6 +141,22 @@ class Tracer:
         with self._lock:
             self._events.append(ev)
 
+    def counter(self, name: str, cat: str = "repro", **values) -> None:
+        """One sample of a wall-time counter track (Chrome ``ph:"C"``):
+        every keyword becomes a stacked series of the track ``name``.
+        Unlike the modeled-cycle waterfall tracks (pids >= 2), these
+        live on the span row (pid 1), so a scheduler's queue depth and
+        slot occupancy line up under its own ``serve.*`` spans. No-op
+        while disabled, like spans."""
+        if not self.enabled:
+            return
+        ev = {"name": name, "cat": cat, "ph": "C",
+              "ts": (_clock_ns() - self._epoch) / 1e3,
+              "pid": PID_SPANS,
+              "args": {k: _jsonable(v) for k, v in values.items()}}
+        with self._lock:
+            self._events.append(ev)
+
     def _record(self, name: str, cat: str, t0: int, t1: int,
                 args: Dict) -> None:
         ev = {"name": name, "cat": cat, "ph": "X",

@@ -29,7 +29,8 @@ from repro import obs
 from repro.core.costmodel import CrossbarSpec, gemm_cost
 
 __all__ = ["GemmShape", "PIMPlan", "plan_model", "BlockLinear",
-           "LinearGroup", "BlockPlan", "block_linears", "plan_block"]
+           "LinearGroup", "BlockPlan", "block_linears", "plan_block",
+           "ServeSlotPlan", "plan_serve_slots"]
 
 
 @dataclass(frozen=True)
@@ -341,6 +342,48 @@ def plan_block(cfg, engine=None,
         sp.set(groups=len(plan.groups),
                cycles_per_token=plan.cycles_per_token)
     return plan
+
+
+# ==================================================== serve slotting ====
+@dataclass(frozen=True)
+class ServeSlotPlan:
+    """The crossbar's serving capacity for one op shape: how many live
+    sequences the continuous batcher may co-schedule (``max_slots``,
+    the physical column-budget cap) and which pass widths it will size
+    batches to (``ladder`` — the precompiled pow2 K-rungs).
+    """
+
+    op: str
+    n_bits: int
+    mac_cols: int            # columns one MAC chain occupies
+    crossbar_cols: int       # physical column budget
+    max_slots: int           # admission cap (live sequences)
+    ladder: Tuple[int, ...]  # precompiled pass widths
+
+    def summary(self) -> str:
+        return (f"serve slots ({self.op} n={self.n_bits}): "
+                f"{self.max_slots} live max "
+                f"({self.mac_cols} cols/chain of {self.crossbar_cols}), "
+                f"K ladder {self.ladder}")
+
+
+def plan_serve_slots(engine, n_bits: int = 8, *, op: str = "mac",
+                     max_slots: Optional[int] = None) -> ServeSlotPlan:
+    """Derive the serving slot budget from the engine's column budget.
+
+    The admission controller's ``max_live`` and the batcher's dynamic-K
+    ladder both come from here: the crossbar fits
+    ``crossbar_cols // mac_cols`` co-scheduled chains, the ladder is the
+    pow2 rungs up to that cap (:meth:`Engine.k_ladder`), and the slot
+    budget is the top rung — so every admitted sequence always has a
+    precompiled pass width to ride. ``max_slots`` clamps the budget
+    (e.g. the deprecated ``--pim-k`` override pinning batch width).
+    """
+    ladder = engine.k_ladder(op, n_bits, max_k=max_slots)
+    mac_cols = engine.compile(op, n_bits).program.layout.n_cols
+    return ServeSlotPlan(op=op, n_bits=n_bits, mac_cols=mac_cols,
+                         crossbar_cols=engine.crossbar.cols or 0,
+                         max_slots=ladder[-1], ladder=ladder)
 
 
 def gemms_from_config(cfg, batch_tokens: int = 1) -> List[GemmShape]:

@@ -1,0 +1,241 @@
+"""ContinuousBatcher: live sequences share co-scheduled crossbar passes.
+
+The unit of serving work goes from "one request end-to-end" to "one
+grouped pass per scheduler step": every step the batcher (1) backfills
+freed slots from the queue (admission policy permitting), (2) gathers
+each live sequence's next MAC operands, (3) sizes the pass to the
+smallest precompiled K-rung that holds the live batch (dynamic K — "K
+MACs per pass" is a function of live load, not a CLI flag), (4) issues
+**one** :class:`~repro.engine.executable.BatchedExecutable` pass whose
+per-op scatter/gather slots carry the live sequences, and (5) scatters
+results back, emitting tokens and freeing the slots of finished
+sequences mid-stream.
+
+The co-scheduled group is the slot substrate: a sequence joining or
+leaving only changes which operand set rides which slot of an
+already-fused program — the K-rung executables are memoized on the
+engine (:meth:`Engine.compile_batch`) and precompiled by
+:meth:`ContinuousBatcher.warmup`, so steady-state serving performs
+**zero recompiles** (the load harness and the CI smoke scenario both
+enforce this). Idle slots of a rung pad with zero operands; their
+columns still cycle but touch nothing observable.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro import obs
+
+from .request import AdmissionController, Request, RequestQueue
+from .sequence import DECODE_ELEMS, SequenceState, zero_operands
+
+__all__ = ["ContinuousBatcher", "StepStats"]
+
+
+@dataclass
+class StepStats:
+    """What one scheduler step did (returned by :meth:`step`)."""
+
+    live: int = 0                 # sequences served by the pass
+    k: int = 0                    # pass width (co-scheduled slots)
+    admitted: int = 0
+    tokens: int = 0               # tokens emitted this step
+    finished: List[int] = field(default_factory=list)   # rids freed
+    queue_depth: int = 0
+
+
+class ContinuousBatcher:
+    """Admission-controlled continuous batching over one Engine.
+
+    ``ladder`` is the set of co-schedule widths the scheduler may size a
+    pass to (default: the engine's pow2 :meth:`~repro.engine.Engine.
+    k_ladder` for the MAC at ``n_bits``, clamped by ``max_slots``).
+    Passing a single-element ladder pins the batch width (what the
+    deprecated ``--pim-k`` override does); ``max_slots=1`` with
+    ``ladder=(1,)`` degenerates to serial one-request-at-a-time serving
+    — the baseline the speedup gate compares against.
+    """
+
+    def __init__(self, engine, queue: Optional[RequestQueue] = None, *,
+                 n_bits: int = 8, decode_elems: int = DECODE_ELEMS,
+                 max_slots: Optional[int] = None,
+                 ladder: Optional[Sequence[int]] = None,
+                 priority: str = "prefill",
+                 backend: Union[None, str, object] = None,
+                 clock=time.perf_counter):
+        self.engine = engine
+        self.queue = queue if queue is not None else RequestQueue()
+        self.n = n_bits
+        self.decode_elems = decode_elems
+        self.backend = backend
+        self.clock = clock
+        if ladder is None:
+            ladder = engine.k_ladder("mac", n_bits, max_k=max_slots)
+        self.ladder: Tuple[int, ...] = tuple(sorted(set(int(k)
+                                                        for k in ladder)))
+        if not self.ladder:
+            raise ValueError(
+                f"no ladder rung fits: a {n_bits}-bit MAC exceeds the "
+                f"crossbar column budget even alone")
+        self.max_slots = (int(max_slots) if max_slots is not None
+                          else self.ladder[-1])
+        if self.max_slots > self.ladder[-1]:
+            self.max_slots = self.ladder[-1]
+        self.admission = AdmissionController(self.queue, self.max_slots,
+                                             priority=priority)
+        self.slots: List[Optional[SequenceState]] = [None] * self.max_slots
+        self.passes = 0
+        self.tokens_emitted = 0
+        self.finished_reqs: List[Request] = []
+        # Cached instrument refs (hot path — see repro.obs.metrics).
+        self._m_tok = obs.counter("serve.sched.tokens")
+        self._m_pass = obs.counter("serve.sched.passes")
+        self._m_adm = obs.counter("serve.sched.admitted")
+        self._m_qd = obs.gauge("serve.sched.queue_depth")
+        self._m_occ = obs.gauge("serve.sched.slot_occupancy")
+        self._m_k = obs.gauge("serve.sched.k")
+        self._h_ttft = obs.windowed_histogram("serve.sched.ttft_us")
+        self._h_tok = obs.windowed_histogram("serve.sched.token_latency_us")
+        self._h_wait = obs.windowed_histogram("serve.sched.queue_wait_us")
+
+    # -------------------------------------------------------- compile ----
+    def warmup(self) -> None:
+        """Precompile every K-rung's fused executable (memoized on the
+        engine), so no scheduler step ever compiles. Call once before
+        taking traffic; the zero-recompile gate measures from here."""
+        with obs.span("serve.sched.warmup", ladder=str(self.ladder)):
+            for k in self.ladder:
+                self.engine.compile_batch("mac", self.n, k)
+
+    # ----------------------------------------------------------- state ----
+    @property
+    def live(self) -> int:
+        return sum(1 for s in self.slots if s is not None)
+
+    @property
+    def idle(self) -> bool:
+        return self.live == 0 and len(self.queue) == 0
+
+    def _choose_k(self, live: int) -> int:
+        """Smallest precompiled rung that holds the live batch."""
+        for k in self.ladder:
+            if k >= live:
+                return k
+        return self.ladder[-1]
+
+    # ------------------------------------------------------------ step ----
+    def _admit(self, now: float) -> int:
+        admitted = self.admission.admit(self.live, now)
+        for req in admitted:
+            slot = self.slots.index(None)
+            self.slots[slot] = SequenceState(req, self.n,
+                                             self.decode_elems)
+            wait = (now - req.t_submit) if req.t_submit is not None else 0.0
+            self._h_wait.observe(wait * 1e6)
+            obs.instant("serve.admit", rid=req.rid, slot=slot,
+                        queue_wait_us=wait * 1e6)
+        if admitted:
+            self._m_adm.inc(len(admitted))
+        return len(admitted)
+
+    def step(self, now: Optional[float] = None) -> StepStats:
+        """One scheduler step: admit, gather, one grouped pass, scatter.
+
+        Returns :class:`StepStats`; a no-op (nothing live, nothing
+        admissible) returns ``live=0`` without touching the engine.
+        """
+        now = self.clock() if now is None else now
+        st = StepStats(queue_depth=len(self.queue))
+        st.admitted = self._admit(now)
+        seqs = [(i, s) for i, s in enumerate(self.slots) if s is not None]
+        st.live = len(seqs)
+        st.queue_depth = len(self.queue)
+        if not seqs:
+            self._m_qd.set(st.queue_depth)
+            self._m_occ.set(0.0)
+            return st
+
+        k = self._choose_k(st.live)
+        st.k = k
+        with obs.span("serve.sched.step", live=st.live, k=k,
+                      queue_depth=st.queue_depth):
+            # Gather: live sequences ride the first `live` slots of the
+            # K-wide fused pass (slot-order stable), the rest pad with
+            # zero operands. Marshal all K operand sets as one batch per
+            # stream so mac_inputs is called once per slot.
+            groups = []
+            for _, seq in seqs:
+                a, b, s_i, c_i = seq.mac_operands()
+                groups.append(self.engine.mac_inputs(
+                    self.n, np.array([a], dtype=object),
+                    np.array([b], dtype=object),
+                    np.array([s_i], dtype=object),
+                    np.array([c_i], dtype=object)))
+            if k > st.live:
+                a, b, s_i, c_i = zero_operands()
+                pad = self.engine.mac_inputs(
+                    self.n, np.array([a], dtype=object),
+                    np.array([b], dtype=object),
+                    np.array([s_i], dtype=object),
+                    np.array([c_i], dtype=object))
+                groups.extend([pad] * (k - st.live))
+
+            bex = self.engine.compile_batch("mac", self.n, k)
+            outs = bex.run(groups, backend=self.backend)
+            self.passes += 1
+            self._m_pass.inc()
+
+            # Scatter: fold each slot's MAC result back into its
+            # sequence; emit tokens; evict finished sequences (their
+            # slots backfill next step, mid-stream for the survivors).
+            t_emit = self.clock()
+            for (slot, seq), out in zip(seqs, outs):
+                s, c = self.engine.mac_accumulate(self.n, out)
+                tok = seq.absorb(int(s[0]), int(c[0]))
+                if tok is None:
+                    continue
+                st.tokens += 1
+                req = seq.req
+                # Per-token latency: time since this request's previous
+                # token; token 0 anchors at admission (TTFT covers the
+                # queue wait and is tracked separately).
+                anchor = (req.t_last_tok if req.t_last_tok is not None
+                          else req.t_admit)
+                if anchor is not None:
+                    self._h_tok.observe((t_emit - anchor) * 1e6)
+                req.t_last_tok = t_emit
+                if req.t_first is None:
+                    req.t_first = t_emit
+                    if req.t_submit is not None:
+                        self._h_ttft.observe(
+                            (t_emit - req.t_submit) * 1e6)
+                if seq.finished:
+                    req.t_done = t_emit
+                    self.slots[slot] = None
+                    st.finished.append(req.rid)
+                    self.finished_reqs.append(req)
+                    obs.instant("serve.finish", rid=req.rid, slot=slot,
+                                tokens=len(req.tokens))
+
+        if st.tokens:
+            self.tokens_emitted += st.tokens
+            self._m_tok.inc(st.tokens)
+        self._m_qd.set(st.queue_depth)
+        self._m_occ.set(st.live / self.max_slots)
+        self._m_k.set(st.k)
+        obs.track("serve.sched", queue_depth=st.queue_depth,
+                  live=st.live, k=st.k)
+        return st
+
+    # ------------------------------------------------------------ drain ----
+    def run_until_idle(self, max_steps: int = 1_000_000) -> int:
+        """Step until queue and slots are empty; returns steps taken."""
+        steps = 0
+        while not self.idle and steps < max_steps:
+            self.step()
+            steps += 1
+        return steps

@@ -1,0 +1,177 @@
+"""Closed-loop load harness: replay a trace, report SLOs, gate speedup.
+
+:func:`run_load` replays a generated trace against one
+:class:`~repro.serve.batcher.ContinuousBatcher` in real time — requests
+are submitted when the wall clock passes their arrival stamp, the
+batcher steps whenever anything is live or queued — and distills a
+:class:`LoadReport`: tokens/sec, per-request TTFT and per-token latency
+percentiles (steady-state window, warmup excluded), queue wait, and the
+engine's compile count delta after warmup (the zero-recompile gate).
+
+:func:`compare_modes` replays the *same* trace (via
+:meth:`Request.fresh`) under continuous batching and under serial
+one-request-at-a-time scheduling (``max_slots=1`` — what serving looked
+like before this subsystem), checks both modes emit bit-identical
+tokens, and reports the throughput speedup the acceptance gate demands.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Union
+
+from repro import obs
+
+from .batcher import ContinuousBatcher
+from .request import Request, RequestQueue
+from .sequence import DECODE_ELEMS, reference_tokens
+
+__all__ = ["LoadReport", "run_load", "compare_modes"]
+
+
+@dataclass
+class LoadReport:
+    """What one replay of a trace measured."""
+
+    mode: str
+    n_requests: int = 0
+    n_tokens: int = 0
+    wall_s: float = 0.0               # first submit -> last token
+    tokens_per_s: float = 0.0
+    passes: int = 0
+    steps: int = 0
+    recompiles: int = 0               # compile events after warmup()
+    bit_exact: bool = True            # every request matched reference
+    # Steady-state percentiles (us), from the obs windowed histograms —
+    # the window resets once `warmup_frac` of requests finished, so
+    # these exclude cold-start effects.
+    ttft_us: Dict[str, float] = field(default_factory=dict)
+    token_latency_us: Dict[str, float] = field(default_factory=dict)
+    queue_wait_us: Dict[str, float] = field(default_factory=dict)
+
+    def summary(self) -> Dict[str, float]:
+        """Flat dict for BENCH json / metric gating."""
+        return {
+            "mode": self.mode,
+            "n_requests": self.n_requests,
+            "n_tokens": self.n_tokens,
+            "wall_s": round(self.wall_s, 6),
+            "tokens_per_s": round(self.tokens_per_s, 3),
+            "passes": self.passes,
+            "recompiles": self.recompiles,
+            "bit_exact": self.bit_exact,
+            "ttft_p50_us": self.ttft_us.get("p50", 0.0),
+            "ttft_p99_us": self.ttft_us.get("p99", 0.0),
+            "token_p50_us": self.token_latency_us.get("p50", 0.0),
+            "token_p99_us": self.token_latency_us.get("p99", 0.0),
+        }
+
+
+def run_load(engine, requests: List[Request], *, mode: str = "continuous",
+             n_bits: int = 8, decode_elems: int = DECODE_ELEMS,
+             max_slots: Optional[int] = None, priority: str = "prefill",
+             backend: Union[None, str, object] = None,
+             warmup_frac: float = 0.25,
+             realtime: bool = True) -> LoadReport:
+    """Replay ``requests`` (a generated trace) and measure.
+
+    ``mode="continuous"`` serves with dynamic-K continuous batching;
+    ``mode="serial"`` pins ``max_slots=1, ladder=(1,)`` — the
+    one-request-at-a-time baseline. ``realtime=False`` ignores arrival
+    stamps and enqueues everything up front (pure throughput mode, used
+    by tests to stay deterministic under slow CI machines).
+    """
+    if mode not in ("continuous", "serial"):
+        raise ValueError(f"mode {mode!r} not in ('continuous', 'serial')")
+    reqs = sorted((r.fresh() for r in requests), key=lambda r: r.arrival)
+    queue = RequestQueue()
+    kwargs = dict(n_bits=n_bits, decode_elems=decode_elems,
+                  priority=priority, backend=backend)
+    if mode == "serial":
+        kwargs.update(max_slots=1, ladder=(1,))
+    else:
+        kwargs.update(max_slots=max_slots)
+    b = ContinuousBatcher(engine, queue, **kwargs)
+    b.warmup()
+    compiles0 = engine.stats()["compiles"]
+
+    # The windowed histograms are process-global; wipe their windows so
+    # this run's percentiles don't inherit a previous run's samples.
+    for h in (b._h_ttft, b._h_tok, b._h_wait):
+        h.window(reset=True)
+
+    n = len(reqs)
+    steady_at = max(1, int(warmup_frac * n)) if n else 0
+    steady_reset_done = False
+    pending = list(reqs)
+    steps = 0
+    with obs.span("serve.load", mode=mode, n_requests=n):
+        t0 = time.perf_counter()
+        while pending or not b.idle:
+            now = time.perf_counter()
+            elapsed = now - t0
+            if realtime:
+                while pending and pending[0].arrival <= elapsed:
+                    queue.submit(pending.pop(0), now)
+            else:
+                while pending:
+                    queue.submit(pending.pop(0), now)
+            if b.live or len(queue):
+                b.step(now)
+                steps += 1
+            elif pending:
+                time.sleep(min(1e-3, max(0.0,
+                                         pending[0].arrival - elapsed)))
+            if (not steady_reset_done
+                    and len(b.finished_reqs) >= steady_at):
+                # Steady state: drop warmup samples from the windows so
+                # the reported percentiles describe the regime users at
+                # scale actually sit in.
+                for h in (b._h_ttft, b._h_tok, b._h_wait):
+                    h.window(reset=True)
+                steady_reset_done = True
+        t_end = time.perf_counter()
+
+    rep = LoadReport(mode=mode)
+    rep.n_requests = len(b.finished_reqs)
+    rep.n_tokens = b.tokens_emitted
+    rep.wall_s = t_end - t0
+    rep.tokens_per_s = (rep.n_tokens / rep.wall_s if rep.wall_s else 0.0)
+    rep.passes = b.passes
+    rep.steps = steps
+    rep.recompiles = engine.stats()["compiles"] - compiles0
+    for req in b.finished_reqs:
+        if req.tokens != reference_tokens(req, n_bits, decode_elems):
+            rep.bit_exact = False
+            break
+    rep.ttft_us = b._h_ttft.window(reset=True)
+    rep.token_latency_us = b._h_tok.window(reset=True)
+    rep.queue_wait_us = b._h_wait.window(reset=True)
+    return rep
+
+
+def compare_modes(engine, requests: List[Request], *,
+                  n_bits: int = 8, decode_elems: int = DECODE_ELEMS,
+                  max_slots: Optional[int] = None,
+                  priority: str = "prefill",
+                  backend: Union[None, str, object] = None,
+                  realtime: bool = True) -> Dict[str, object]:
+    """Replay one trace under continuous and serial scheduling.
+
+    Returns ``{"continuous": LoadReport, "serial": LoadReport,
+    "speedup": float, "tokens_match": bool}`` — ``speedup`` is the
+    continuous-over-serial tokens/sec ratio the acceptance gate (>= 3x)
+    checks, ``tokens_match`` asserts the two schedules emitted
+    bit-identical tokens per request (scheduling must never change
+    results).
+    """
+    cont = run_load(engine, requests, mode="continuous", n_bits=n_bits,
+                    decode_elems=decode_elems, max_slots=max_slots,
+                    priority=priority, backend=backend, realtime=realtime)
+    ser = run_load(engine, requests, mode="serial", n_bits=n_bits,
+                   decode_elems=decode_elems, backend=backend,
+                   realtime=realtime)
+    speedup = (cont.tokens_per_s / ser.tokens_per_s
+               if ser.tokens_per_s else 0.0)
+    return {"continuous": cont, "serial": ser, "speedup": speedup,
+            "tokens_match": cont.bit_exact and ser.bit_exact}

@@ -173,6 +173,76 @@ def test_cache_distinguishes_flags_and_config():
                                           "cn_latch"}
 
 
+def test_concurrent_compile_miss_compiles_once(monkeypatch, tmp_path):
+    """Scheduler threads missing the same OpSpec concurrently must
+    produce exactly ONE compile+verify+spill — the per-key lock makes
+    the first thread do the work while same-key waiters block and adopt
+    its entry (regression: compile used to run outside any key lock, so
+    N racing threads each built, verified and spilled the program,
+    last-writer-wins on the disk artifact)."""
+    import threading
+
+    from repro.compiler.cache import ProgramCache
+    from repro.compiler.diskcache import cache_dir
+
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path / "cc"))
+    cache = ProgramCache(use_disk=True)
+    n_threads = 8
+    results = [None] * n_threads
+    barrier = threading.Barrier(n_threads)
+
+    def worker(i):
+        barrier.wait()                 # maximize miss-path contention
+        results[i] = cache.get_or_compile("multpim", 6)
+
+    ts = [threading.Thread(target=worker, args=(i,))
+          for i in range(n_threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+
+    assert all(r is results[0] for r in results), \
+        "every thread must adopt the one compiled entry"
+    assert results[0].verified is not None
+    st = cache.stats()
+    assert st["compiles"] == 1, f"raced compiles: {st}"
+    assert st["misses"] == 1 and st["hits"] == n_threads - 1
+    # exactly one spilled artifact on disk
+    files = [p for p in cache_dir().iterdir() if p.is_file()]
+    assert len(files) == 1
+
+
+def test_concurrent_distinct_keys_compile_in_parallel(monkeypatch,
+                                                      tmp_path):
+    """The per-key serialization must not serialize DIFFERENT keys:
+    distinct specs compiled from distinct threads all land."""
+    import threading
+
+    from repro.compiler.cache import ProgramCache
+
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path / "cc2"))
+    cache = ProgramCache(use_disk=True)
+    specs = [("multpim", 4), ("multpim", 6), ("multpim_mac", 4),
+             ("rime", 4)]
+    results = {}
+    barrier = threading.Barrier(len(specs))
+
+    def worker(kind, n):
+        barrier.wait()
+        results[(kind, n)] = cache.get_or_compile(kind, n)
+
+    ts = [threading.Thread(target=worker, args=s) for s in specs]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert len(results) == len(specs)
+    assert cache.stats()["compiles"] == len(specs)
+    for (kind, n), ent in results.items():
+        assert ent.key.kind == kind and ent.key.n == n
+
+
 def test_compiled_wrapper_and_jax_executor_agree():
     n = 4
     prog = multpim_multiplier_compiled(n)

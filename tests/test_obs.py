@@ -319,3 +319,77 @@ def test_launch_imports_do_not_configure_logging():
     importlib.reload(train)
     importlib.reload(serve)
     assert logging.getLogger().handlers == root_before
+
+
+# ------------------------------------------------ windowed histogram ----
+def test_windowed_histogram_window_vs_cumulative():
+    h = obs.WindowedHistogram("wh.lat")
+    for v in (1.0, 2.0, 3.0, 4.0):
+        h.observe(v)
+    w = h.window()                         # snapshots AND resets
+    assert w["count"] == 4 and w["min"] == 1.0 and w["max"] == 4.0
+    assert w["p50"] == 2.0 and w["p99"] == 4.0
+    # fresh interval: only post-reset samples count toward the window
+    h.observe(10.0)
+    h.observe(20.0)
+    w2 = h.window(reset=False)
+    assert w2["count"] == 2 and w2["min"] == 10.0 and w2["p50"] == 10.0
+    assert h.window()["count"] == 2        # reset=False left it intact
+    assert h.window()["count"] == 0        # ... and reset=True wiped it
+    assert math.isnan(h.window()["p50"])
+    # the cumulative view kept every sample across all window resets
+    assert h.snapshot()["count"] == 6
+    assert h.percentile(1.0) == 20.0
+
+
+def test_windowed_histogram_registry_identity_and_guard():
+    reg = obs.Registry()
+    w1 = reg.windowed_histogram("wh.reg")
+    assert reg.windowed_histogram("wh.reg") is w1
+    # histogram() happily serves the windowed instance under its name
+    assert reg.histogram("wh.reg") is w1
+    # ... but a name claimed by a plain histogram can't gain a window
+    reg.histogram("wh.plain")
+    with pytest.raises(TypeError):
+        reg.windowed_histogram("wh.plain")
+
+
+def test_windowed_histogram_reset_wipes_window():
+    reg = obs.Registry()
+    h = reg.windowed_histogram("wh.reset")
+    h.observe(5.0)
+    reg.reset()                            # keeps instrument identity
+    assert reg.windowed_histogram("wh.reset") is h
+    assert h.window()["count"] == 0
+    assert h.snapshot()["count"] == 0
+
+
+def test_windowed_histogram_window_deterministic_beyond_cap():
+    a = obs.WindowedHistogram("wh.det", cap=8)
+    b = obs.WindowedHistogram("wh.det", cap=8)
+    for i in range(100):
+        a.observe(float(i))
+        b.observe(float(i))
+    assert a.window() == b.window()        # seeded reservoir
+
+
+# ------------------------------------------------- counter tracks ----
+def test_counter_track_events_schema(global_tracer, tmp_path):
+    """obs.track emits Chrome ph:"C" counter samples on the span row
+    (pid 1), one stacked series per keyword."""
+    obs.track("serve.sched", queue_depth=3, live=2, k=4)
+    obs.track("serve.sched", queue_depth=0, live=1, k=1)
+    path = tmp_path / "trace.json"
+    obs.export_trace(str(path))
+    evs = [e for e in json.loads(path.read_text())["traceEvents"]
+           if e.get("ph") == "C" and e["name"] == "serve.sched"]
+    assert len(evs) == 2
+    assert evs[0]["pid"] == 1
+    assert evs[0]["args"] == {"queue_depth": 3, "live": 2, "k": 4}
+    assert evs[0]["ts"] <= evs[1]["ts"]
+
+
+def test_counter_track_noop_when_disabled():
+    t = Tracer()
+    t.counter("serve.sched", queue_depth=9)
+    assert len(t) == 0

@@ -1,0 +1,199 @@
+"""repro.serve: continuous-batching scheduler — traffic determinism,
+admission policy, bit-parity of slot eviction/backfill across backends,
+dynamic K with zero steady-state recompiles, and the load harness."""
+import pytest
+
+from repro.engine import Engine
+from repro.serve import (AdmissionController, ContinuousBatcher, Request,
+                         RequestQueue, TrafficConfig, compare_modes,
+                         generate, reference_tokens, run_load)
+
+pytestmark = pytest.mark.system
+
+N_BITS = 8
+
+
+def _req(rid, n_tokens, prompt=(3, 5), seed=0):
+    return Request(rid=rid, arrival=0.0, prompt=tuple(prompt),
+                   max_new_tokens=n_tokens, seed=seed)
+
+
+# ---------------------------------------------------------- traffic ----
+def test_traffic_deterministic_and_bounded():
+    cfg = TrafficConfig(n_requests=10, rate=500.0, seed=7, n_bits=N_BITS)
+    a, b = generate(cfg), generate(cfg)
+    assert [(r.arrival, r.prompt, r.max_new_tokens) for r in a] \
+        == [(r.arrival, r.prompt, r.max_new_tokens) for r in b]
+    assert generate(TrafficConfig(n_requests=10, seed=8))[0].arrival \
+        != a[0].arrival
+    hi = 1 << (N_BITS - 2)
+    for r in a:
+        assert r.arrival > 0
+        assert len(r.prompt) in cfg.prompt_lens
+        assert r.max_new_tokens in cfg.output_lens
+        assert all(0 <= p < hi for p in r.prompt), \
+            "prompt elements must stay in accumulator-safe range"
+    # arrivals strictly increase (exponential gaps)
+    assert all(x.arrival < y.arrival for x, y in zip(a, a[1:]))
+
+
+def test_traffic_replay_via_fresh():
+    r = generate(TrafficConfig(n_requests=1))[0]
+    r.tokens.append(42)
+    r.phase = "finished"
+    r.t_submit = 1.0
+    f = r.fresh()
+    assert (f.rid, f.prompt, f.max_new_tokens) \
+        == (r.rid, r.prompt, r.max_new_tokens)
+    assert f.tokens == [] and f.phase == "queued" and f.t_submit is None
+    assert r.tokens == [42]          # original untouched
+
+
+# -------------------------------------------------------- admission ----
+def test_queue_fcfs_and_prefill_admission():
+    q = RequestQueue()
+    for i in range(5):
+        q.submit(_req(i, 1), now=float(i))
+    adm = AdmissionController(q, max_live=2, priority="prefill")
+    assert adm.admissible(live=0) == 2
+    first = adm.admit(live=0, now=9.0)
+    assert [r.rid for r in first] == [0, 1]      # FCFS
+    assert all(r.t_admit == 9.0 for r in first)
+    # prefill priority backfills a single freed slot mid-stream
+    assert adm.admissible(live=1) == 1
+    assert [r.rid for r in adm.admit(live=1)] == [2]
+    assert adm.admissible(live=2) == 0
+    assert len(q) == 2
+
+
+def test_decode_priority_drains_batch_before_admitting():
+    q = RequestQueue()
+    for i in range(4):
+        q.submit(_req(i, 1))
+    adm = AdmissionController(q, max_live=2, priority="decode")
+    assert len(adm.admit(live=0)) == 2
+    assert adm.admissible(live=1) == 0      # no mid-stream backfill
+    assert adm.admissible(live=2) == 0
+    assert len(adm.admit(live=0)) == 2      # next wave only when drained
+
+
+def test_admission_rejects_bad_config():
+    q = RequestQueue()
+    with pytest.raises(ValueError):
+        AdmissionController(q, max_live=0)
+    with pytest.raises(ValueError):
+        AdmissionController(q, max_live=1, priority="fifo")
+
+
+# ------------------------------------------------------- bit parity ----
+def test_single_request_matches_reference():
+    eng = Engine()
+    req = _req(0, 3, prompt=(9, 17, 33))
+    b = ContinuousBatcher(eng, n_bits=N_BITS, max_slots=1, ladder=(1,))
+    b.warmup()
+    b.queue.submit(req, 0.0)
+    b.run_until_idle()
+    assert req.phase == "finished"
+    assert req.tokens == reference_tokens(req, N_BITS)
+    assert len(req.tokens) == 3
+
+
+@pytest.mark.parametrize("backend", ["numpy", "numpy:pack=true",
+                                     "jax:pack=true", "pallas:pack=true"])
+def test_eviction_backfill_bit_parity(backend):
+    """A sequence's tokens must be identical whether it ran alone,
+    joined mid-batch, or survived its neighbors' eviction — on every
+    backend. With max_slots=2: r0 (4 tokens) and r1 (1 token) start
+    together; r1 finishes and r2 backfills its slot mid-stream while r0
+    keeps decoding; r2 then survives r0's eviction and r3 joins."""
+    eng = Engine()
+    reqs = [_req(0, 4), _req(1, 1, prompt=(7, 2, 11)),
+            _req(2, 2, prompt=(5,)), _req(3, 1, prompt=(8, 8))]
+    b = ContinuousBatcher(eng, n_bits=N_BITS, max_slots=2,
+                          decode_elems=2, backend=backend)
+    for r in reqs:
+        b.queue.submit(r, 0.0)
+    b.warmup()
+    b.run_until_idle()
+    for r in reqs:
+        assert r.phase == "finished"
+        assert r.tokens == reference_tokens(r, N_BITS, 2), \
+            f"rid {r.rid} diverged under continuous batching"
+    # and identical to a solo (batch-of-one) run of the same request
+    solo = reqs[0].fresh()
+    sb = ContinuousBatcher(eng, n_bits=N_BITS, max_slots=1, ladder=(1,),
+                           decode_elems=2, backend=backend)
+    sb.queue.submit(solo, 0.0)
+    sb.warmup()
+    sb.run_until_idle()
+    assert solo.tokens == reqs[0].tokens
+
+
+# -------------------------------------------------------- dynamic K ----
+def test_dynamic_k_tracks_live_batch_with_zero_recompiles():
+    eng = Engine()
+    b = ContinuousBatcher(eng, n_bits=N_BITS, max_slots=8,
+                          decode_elems=2)
+    assert b.ladder == (1, 2, 4, 8)
+    for i in range(8):
+        b.queue.submit(_req(i, 1 + i % 3, prompt=(2 + i,)), 0.0)
+    b.warmup()
+    compiles0 = eng.stats()["compiles"]
+    seen_k = []
+    while not b.idle:
+        st = b.step()
+        seen_k.append((st.live, st.k))
+        # pass width = smallest precompiled rung >= live batch
+        assert st.k == min(k for k in b.ladder if k >= st.live)
+    assert seen_k[0] == (8, 8)
+    assert any(k < 8 for _, k in seen_k), \
+        "K never stepped down as the batch drained"
+    assert eng.stats()["compiles"] == compiles0, \
+        "steady-state serving must never recompile"
+    assert len(b.finished_reqs) == 8
+
+
+def test_pinned_ladder_caps_slots():
+    eng = Engine()
+    b = ContinuousBatcher(eng, n_bits=N_BITS, ladder=(4,), max_slots=4)
+    assert b.ladder == (4,)
+    for i in range(6):
+        b.queue.submit(_req(i, 1), 0.0)
+    b.warmup()
+    st = b.step()
+    assert st.live == 4 and st.k == 4     # width pinned, budget capped
+
+
+# ---------------------------------------------------------- harness ----
+def test_harness_continuous_vs_serial_same_tokens_fewer_passes():
+    eng = Engine("numpy:pack=true")
+    reqs = generate(TrafficConfig(n_requests=12, rate=1e6, seed=3,
+                                  n_bits=N_BITS))
+    res = compare_modes(eng, reqs, realtime=False)
+    cont, ser = res["continuous"], res["serial"]
+    assert res["tokens_match"] and cont.bit_exact and ser.bit_exact
+    assert cont.n_tokens == ser.n_tokens > 0
+    assert cont.recompiles == 0 and ser.recompiles == 0
+    # Deterministic proxy for the >= 3x wall-clock gate (which CI's
+    # serve_load scenario enforces): with >= 8-way slots the continuous
+    # schedule needs several-fold fewer crossbar passes for the same
+    # trace, and pass count is what wall time scales with.
+    assert ser.passes >= 3 * cont.passes
+    assert res["speedup"] > 1.0
+
+
+def test_run_load_reports_slos():
+    eng = Engine("numpy:pack=true")
+    reqs = generate(TrafficConfig(n_requests=6, rate=1e6, seed=1))
+    rep = run_load(eng, reqs, realtime=False)
+    assert rep.n_requests == 6
+    s = rep.summary()
+    assert s["tokens_per_s"] > 0
+    assert s["ttft_p99_us"] >= s["ttft_p50_us"] > 0
+    assert s["token_p99_us"] >= s["token_p50_us"] > 0
+    assert rep.steps == rep.passes       # every step had live work
+
+
+def test_run_load_rejects_unknown_mode():
+    with pytest.raises(ValueError):
+        run_load(Engine(), [], mode="batch")
