@@ -2,17 +2,17 @@
 
 Prints ``name,us_per_call,derived`` CSV (the harness contract) and, so
 the perf trajectory is tracked across PRs, writes a machine-readable
-JSON (``--json``, default ``BENCH_pr7.json``) mapping each section to
+JSON (``--json``, default ``BENCH_pr8.json``) mapping each section to
 its rows::
 
     {"sections": {"table1": [[name, us_per_call, derived], ...], ...},
      "errors": {"section": "repr(exc)"}}
 
   PYTHONPATH=src python -m benchmarks.run [--section table1|table2|table3|
-                                           fa|opt|sim|throughput|block_pim|
-                                           serve_load|obs|roofline|all|
-                                           sec1,sec2,...]
-                                          [--json BENCH_pr7.json|off]
+                                           fa|opt|sim|throughput|resident|
+                                           block_pim|serve_load|obs|
+                                           roofline|all|sec1,sec2,...]
+                                          [--json BENCH_pr8.json|off]
                                           [--trace OUT.json]
                                           [--metrics OUT.json]
 """
@@ -27,7 +27,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--section", default="all")
     ap.add_argument("--dryrun-json", default="dryrun_results.json")
-    ap.add_argument("--json", default="BENCH_pr7.json",
+    ap.add_argument("--json", default="BENCH_pr8.json",
                     help="machine-readable output path ('off' disables)")
     ap.add_argument("--trace", default=None, metavar="OUT.json",
                     help="enable span tracing and write a Chrome "
@@ -51,6 +51,7 @@ def main() -> None:
         "opt": tables.opt_pipeline,
         "sim": tables.sim_throughput,
         "throughput": tables.throughput,
+        "resident": tables.resident_chain,
         "pim_plan": tables.pim_plan_sweep,
         "block_pim": tables.block_pim_plan,
         "serve_load": tables.serve_load,

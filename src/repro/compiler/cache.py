@@ -61,12 +61,15 @@ def _default_builders() -> Dict[str, Callable[..., Program]]:
     from repro.core.matvec import multpim_mac
     from repro.core.multpim import multpim_multiplier
     from repro.core.multpim_area import multpim_area_multiplier
+    from repro.core.staging import recomb_program, stage_program
     return {
         "multpim": multpim_multiplier,
         "multpim_mac": multpim_mac,
         "hajali": hajali_multiplier,
         "rime": rime_multiplier,
         "multpim_area": multpim_area_multiplier,
+        "stage": stage_program,
+        "recomb": recomb_program,
     }
 
 

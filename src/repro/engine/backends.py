@@ -51,9 +51,9 @@ from repro.core.executor import PackedProgram, gate_eval_packed
 from repro.core.isa import Gate
 
 __all__ = ["Backend", "NumpyBackend", "JaxBackend", "PallasBackend",
-           "register_backend", "resolve_backend", "backend_names",
-           "autotune_row_block", "DEFAULT_ROW_BLOCK", "MAX_ROW_BLOCK",
-           "DEFAULT_MACRO"]
+           "ResidentIndex", "supports_resident", "register_backend",
+           "resolve_backend", "backend_names", "autotune_row_block",
+           "DEFAULT_ROW_BLOCK", "MAX_ROW_BLOCK", "DEFAULT_MACRO"]
 
 
 @runtime_checkable
@@ -67,6 +67,258 @@ class Backend(Protocol):
         """``state`` (rows, C) {0,1} with C == packed table width; returns
         the final (rows, C) state after all cycles."""
         ...
+
+
+# ------------------------------------------------------------- resident ----
+@dataclass(frozen=True)
+class ResidentIndex:
+    """Static column wiring of a resident MAC chain (mac/stage/recomb),
+    precomputed by :class:`~repro.engine.executable.ResidentExecutable`
+    from the three compiled programs' input/output maps. Every transfer
+    between programs is a device-side column gather/scatter between
+    freshly-zeroed states — no physical column aliasing is assumed, so
+    the wiring survives the optimizer's column remapping.
+    """
+
+    c_mac: int          # packed table widths (incl. scratch column)
+    c_stage: int
+    c_rec: int
+    ab_cols: np.ndarray      # mac inputs a ++ b       (new operand planes)
+    un_cols: np.ndarray      # mac input un            (fresh lanes -> 1)
+    slo_cols: np.ndarray     # mac input s_lo          (fresh lanes -> 0)
+    cn_cols: np.ndarray      # mac input c_lo_n        (always 1; c_lo = 0
+    #                          stays at the zeroed alloc — see staging.py)
+    stage_src: np.ndarray    # mac outputs s_hi ++ c_hi ++ lo
+    stage_dst: np.ndarray    # stage inputs s_hi ++ c_hi ++ lo
+    mac_src: np.ndarray      # stage outputs un ++ s_lo
+    mac_dst: np.ndarray      # mac inputs   un ++ s_lo
+    rec_dst: np.ndarray      # recomb inputs s_hi ++ c_hi ++ lo
+    rec_out: np.ndarray      # recomb output out (2n bits)
+
+
+class _ChainBase:
+    """Shared packing helpers for the resident chains. A chain owns the
+    live device state representation for ``rows`` parallel MAC chains
+    (rows are the crossbar's SIMD axis — serve slots, matvec rows);
+    ``first``/``step`` advance every lane one MAC pass, ``drain`` runs
+    the recombination program on a *separate* state and unpacks only its
+    ``out`` planes — the single host transfer of a chain's lifetime.
+    """
+
+    def __init__(self, mac, stage, recomb, idx: ResidentIndex, rows: int,
+                 word_bits: Optional[int]):
+        self.mac, self.stage, self.recomb = mac, stage, recomb
+        self.idx = idx
+        self.rows = rows
+        self.word_bits = word_bits
+
+    def _pack(self, planes: np.ndarray) -> np.ndarray:
+        if self.word_bits is None:
+            return np.asarray(planes, dtype=np.uint8)
+        return pack_rows(np.asarray(planes, dtype=np.uint8),
+                         self.word_bits)
+
+    def _pack_mask(self, mask: np.ndarray) -> np.ndarray:
+        """(rows,) bool -> the per-lane broadcast column: (rows, 1) uint8
+        lanes unpacked, (W, 1) packed words with one bit per fresh lane."""
+        return self._pack(np.asarray(mask, dtype=np.uint8)[:, None])
+
+
+class _NumpyChain(_ChainBase):
+    """Eager numpy resident chain (unpacked uint8 or 64-wide packed)."""
+
+    def __init__(self, backend: "NumpyBackend", mac, stage, recomb,
+                 idx: ResidentIndex, rows: int):
+        super().__init__(mac, stage, recomb, idx, rows,
+                         64 if backend.pack else None)
+        self.backend = backend
+        if backend.pack:
+            self._w = -(-rows // 64)
+            self._full = ~np.uint64(0)
+            self._dt = np.uint64
+        else:
+            self._w = rows
+            self._full = np.uint8(1)
+            self._dt = np.uint8
+
+    def _zeros(self, c: int) -> np.ndarray:
+        return np.zeros((self._w, c), dtype=self._dt)
+
+    def _run(self, packed: PackedProgram, st: np.ndarray) -> np.ndarray:
+        with obs.span("backend.kernel", backend=self.backend.name,
+                      rows=self.rows, cycles=packed.n_cycles):
+            if self.word_bits is None:
+                return NumpyBackend._kernel_unpacked(packed, st)
+            return NumpyBackend._kernel_packed(packed, st)
+
+    def first(self, planes: np.ndarray) -> np.ndarray:
+        idx = self.idx
+        st = self._zeros(idx.c_mac)
+        st[:, idx.un_cols] = self._full
+        st[:, idx.cn_cols] = self._full
+        st[:, idx.ab_cols] = self._pack(planes)
+        return self._run(self.mac, st)
+
+    def step(self, dev: np.ndarray, planes: np.ndarray,
+             fresh: np.ndarray) -> np.ndarray:
+        idx = self.idx
+        sst = self._zeros(idx.c_stage)
+        sst[:, idx.stage_dst] = dev[:, idx.stage_src]
+        sst = self._run(self.stage, sst)
+        st = self._zeros(idx.c_mac)
+        st[:, idx.mac_dst] = sst[:, idx.mac_src]
+        st[:, idx.cn_cols] = self._full
+        if fresh.any():
+            fw = self._pack_mask(fresh)
+            st[:, idx.un_cols] |= fw
+            st[:, idx.slo_cols] &= ~fw if self.word_bits else 1 - fw
+        st[:, idx.ab_cols] = self._pack(planes)
+        return self._run(self.mac, st)
+
+    def drain(self, dev: np.ndarray) -> np.ndarray:
+        idx = self.idx
+        rst = self._zeros(idx.c_rec)
+        rst[:, idx.rec_dst] = dev[:, idx.stage_src]
+        rst = self._run(self.recomb, rst)
+        out = rst[:, idx.rec_out]
+        if self.word_bits is None:
+            return out
+        with obs.span("backend.unpack", backend=self.backend.name,
+                      rows=self.rows):
+            return unpack_rows(np.ascontiguousarray(out), self.rows)
+
+
+class _JaxChain(_ChainBase):
+    """Packed jax resident chain: the inter-pass column moves, the stage
+    scan, the fresh-lane masks, the new-operand scatter and the MAC scan
+    fuse into **one** jitted dispatch per pass (column index arrays are
+    closure constants; per-step data is just the packed operand planes
+    and the fresh-lane word). State stays a device ``(W, C)`` uint32
+    array between passes — no host transfer until ``drain``.
+    """
+
+    def __init__(self, backend, mac, stage, recomb, idx: ResidentIndex,
+                 rows: int):
+        super().__init__(mac, stage, recomb, idx, rows, 32)
+        self.backend = backend
+        self.name = backend.name
+        import jax
+        import jax.numpy as jnp
+
+        from repro.kernels.ref import packed_device_tables, packed_scan_body
+        macro = _macro_factor(backend.macro)
+        mac_t, mac_f = packed_device_tables(mac, macro)
+        stg_t, stg_f = packed_device_tables(stage, macro)
+        rec_t, rec_f = packed_device_tables(recomb, macro)
+        W = -(-rows // 32)
+        FULL = jnp.uint32(0xFFFFFFFF)
+
+        def _first(planes_w):
+            st = jnp.zeros((W, idx.c_mac), jnp.uint32)
+            st = st.at[:, idx.un_cols].set(FULL)
+            st = st.at[:, idx.cn_cols].set(FULL)
+            st = st.at[:, idx.ab_cols].set(planes_w)
+            return packed_scan_body(st, *mac_t, factor=mac_f)
+
+        def _step(dev, planes_w, fresh_w):
+            sst = jnp.zeros((W, idx.c_stage), jnp.uint32)
+            sst = sst.at[:, idx.stage_dst].set(dev[:, idx.stage_src])
+            sst = packed_scan_body(sst, *stg_t, factor=stg_f)
+            st = jnp.zeros((W, idx.c_mac), jnp.uint32)
+            st = st.at[:, idx.mac_dst].set(sst[:, idx.mac_src])
+            st = st.at[:, idx.cn_cols].set(FULL)
+            st = st.at[:, idx.un_cols].set(st[:, idx.un_cols] | fresh_w)
+            st = st.at[:, idx.slo_cols].set(st[:, idx.slo_cols] & ~fresh_w)
+            st = st.at[:, idx.ab_cols].set(planes_w)
+            return packed_scan_body(st, *mac_t, factor=mac_f)
+
+        def _drain(dev):
+            rst = jnp.zeros((W, idx.c_rec), jnp.uint32)
+            rst = rst.at[:, idx.rec_dst].set(dev[:, idx.stage_src])
+            rst = packed_scan_body(rst, *rec_t, factor=rec_f)
+            return rst[:, idx.rec_out]
+
+        # Donating the previous pass's state buffer lets XLA reuse it in
+        # place on accelerators; CPU jax would only warn, so skip there.
+        donate = (0,) if jax.default_backend() != "cpu" else ()
+        self._first = jax.jit(_first)
+        self._step = jax.jit(_step, donate_argnums=donate)
+        self._drain = jax.jit(_drain)
+
+    def _kernel_span(self, programs: str, cycles: int):
+        return obs.span("backend.kernel", backend=self.name,
+                        rows=self.rows, cycles=cycles, fused=programs)
+
+    def first(self, planes: np.ndarray):
+        with self._kernel_span("mac", self.mac.n_cycles):
+            return self._first(self._pack(planes))
+
+    def step(self, dev, planes: np.ndarray, fresh: np.ndarray):
+        with self._kernel_span("stage+mac",
+                               self.stage.n_cycles + self.mac.n_cycles):
+            return self._step(dev, self._pack(planes),
+                              self._pack_mask(fresh))
+
+    def drain(self, dev) -> np.ndarray:
+        with self._kernel_span("recomb", self.recomb.n_cycles):
+            out = self._drain(dev)
+        with obs.span("backend.unpack", backend=self.name, rows=self.rows):
+            return unpack_rows(np.asarray(out), self.rows)
+
+
+class _PallasChain(_ChainBase):
+    """Packed Pallas resident chain: state stays a device ``(W, C)``
+    uint32 array between passes; the column moves and masks are eager
+    jnp index ops, each program pass one Pallas kernel launch."""
+
+    def __init__(self, backend: "PallasBackend", mac, stage, recomb,
+                 idx: ResidentIndex, rows: int):
+        super().__init__(mac, stage, recomb, idx, rows, 32)
+        self.backend = backend
+        import jax.numpy as jnp
+        self._jnp = jnp
+        self._w = -(-rows // 32)
+        self._full = jnp.uint32(0xFFFFFFFF)
+        self._wb = max(8, (backend.row_block or DEFAULT_ROW_BLOCK) // 32)
+
+    def _run(self, packed: PackedProgram, st):
+        from repro.kernels.crossbar_step import crossbar_run_pallas_packed
+        with obs.span("backend.kernel", backend=self.backend.name,
+                      rows=self.rows, cycles=packed.n_cycles):
+            return crossbar_run_pallas_packed(
+                st, packed, macro=_macro_factor(self.backend.macro),
+                word_block=self._wb, interpret=self.backend.interpret)
+
+    def first(self, planes: np.ndarray):
+        jnp, idx = self._jnp, self.idx
+        st = jnp.zeros((self._w, idx.c_mac), jnp.uint32)
+        st = st.at[:, idx.un_cols].set(self._full)
+        st = st.at[:, idx.cn_cols].set(self._full)
+        st = st.at[:, idx.ab_cols].set(self._pack(planes))
+        return self._run(self.mac, st)
+
+    def step(self, dev, planes: np.ndarray, fresh: np.ndarray):
+        jnp, idx = self._jnp, self.idx
+        sst = jnp.zeros((self._w, idx.c_stage), jnp.uint32)
+        sst = sst.at[:, idx.stage_dst].set(dev[:, idx.stage_src])
+        sst = self._run(self.stage, sst)
+        st = jnp.zeros((self._w, idx.c_mac), jnp.uint32)
+        st = st.at[:, idx.mac_dst].set(sst[:, idx.mac_src])
+        st = st.at[:, idx.cn_cols].set(self._full)
+        fw = jnp.asarray(self._pack_mask(fresh))
+        st = st.at[:, idx.un_cols].set(st[:, idx.un_cols] | fw)
+        st = st.at[:, idx.slo_cols].set(st[:, idx.slo_cols] & ~fw)
+        st = st.at[:, idx.ab_cols].set(self._pack(planes))
+        return self._run(self.mac, st)
+
+    def drain(self, dev) -> np.ndarray:
+        jnp, idx = self._jnp, self.idx
+        rst = jnp.zeros((self._w, idx.c_rec), jnp.uint32)
+        rst = rst.at[:, idx.rec_dst].set(dev[:, idx.stage_src])
+        rst = self._run(self.recomb, rst)
+        with obs.span("backend.unpack", backend=self.backend.name,
+                      rows=self.rows):
+            return unpack_rows(np.asarray(rst[:, idx.rec_out]), self.rows)
 
 
 # ---------------------------------------------------------------- numpy ----
@@ -94,6 +346,15 @@ class NumpyBackend:
     def _run_unpacked(self, packed: PackedProgram,
                       state: np.ndarray) -> np.ndarray:
         st = np.asarray(state, dtype=np.uint8).copy()
+        return self._kernel_unpacked(packed, st)
+
+    @staticmethod
+    def _kernel_unpacked(packed: PackedProgram,
+                         st: np.ndarray) -> np.ndarray:
+        """The interpreter loop alone — ``st`` (rows, C) uint8 is mutated
+        in place and returned. Shared by :meth:`run_state` and the
+        resident chains (which own their state arrays and emit their own
+        spans, so no pack/copy here)."""
         gate_id, in_cols = packed.gate_id, packed.in_cols
         out_col = packed.out_col
         for t in range(packed.n_cycles):
@@ -127,26 +388,37 @@ class NumpyBackend:
         rows = state.shape[0]
         with obs.span("backend.pack", backend=self.name, rows=rows):
             st = pack_rows(state, 64)
+        with obs.span("backend.kernel", backend=self.name, rows=rows,
+                      cycles=packed.n_cycles):
+            st = self._kernel_packed(packed, st)
+        with obs.span("backend.unpack", backend=self.name, rows=rows):
+            return unpack_rows(st, rows)
+
+    @staticmethod
+    def _kernel_packed(packed: PackedProgram, st: np.ndarray) -> np.ndarray:
+        """The packed interpreter loop alone — ``st`` (W, C) uint64 words
+        are mutated in place and returned. Shared by :meth:`run_state`
+        and the resident chains."""
         full = ~np.uint64(0)
         gate_id, in_cols, out_col = (packed.gate_id, packed.in_cols,
                                      packed.out_col)
-        with obs.span("backend.kernel", backend=self.name, rows=rows,
-                      cycles=packed.n_cycles):
-            for t in range(packed.n_cycles):
-                imask = packed.init_mask[t]
-                if imask.any():
-                    st[:, imask] = full
-                    continue
-                gid, ics, ocs = gate_id[t], in_cols[t], out_col[t]
-                # Gathers before the write: ops in a cycle are
-                # simultaneous.
-                res = gate_eval_packed(np, gid[None, :], st[:, ics[:, 0]],
-                                       st[:, ics[:, 1]], st[:, ics[:, 2]])
-                # Exact AND accumulation, duplicate scratch writes
-                # included.
-                np.bitwise_and.at(st, (slice(None), ocs), res)
-        with obs.span("backend.unpack", backend=self.name, rows=rows):
-            return unpack_rows(st, rows)
+        for t in range(packed.n_cycles):
+            imask = packed.init_mask[t]
+            if imask.any():
+                st[:, imask] = full
+                continue
+            gid, ics, ocs = gate_id[t], in_cols[t], out_col[t]
+            # Gathers before the write: ops in a cycle are simultaneous.
+            res = gate_eval_packed(np, gid[None, :], st[:, ics[:, 0]],
+                                   st[:, ics[:, 1]], st[:, ics[:, 2]])
+            # Exact AND accumulation, duplicate scratch writes included.
+            np.bitwise_and.at(st, (slice(None), ocs), res)
+        return st
+
+    def resident_chain(self, mac: PackedProgram, stage: PackedProgram,
+                       recomb: PackedProgram, idx: ResidentIndex,
+                       rows: int) -> _NumpyChain:
+        return _NumpyChain(self, mac, stage, recomb, idx, rows)
 
 
 # ------------------------------------------------------------------ JAX ----
@@ -191,6 +463,14 @@ class JaxBackend:
             final = crossbar_run_ref(jnp.asarray(state, dtype=jnp.uint8),
                                      packed)
             return np.asarray(final)
+
+    def resident_chain(self, mac: PackedProgram, stage: PackedProgram,
+                       recomb: PackedProgram, idx: ResidentIndex,
+                       rows: int) -> _JaxChain:
+        if not self.pack:
+            raise ValueError("resident execution on the jax backend "
+                             "requires pack=true (spec 'jax:pack=true')")
+        return _JaxChain(self, mac, stage, recomb, idx, rows)
 
 
 # --------------------------------------------------------------- Pallas ----
@@ -261,6 +541,27 @@ class PallasBackend:
                                         or DEFAULT_ROW_BLOCK,
                                         interpret=self.interpret)
             return np.asarray(final)
+
+    def resident_chain(self, mac: PackedProgram, stage: PackedProgram,
+                       recomb: PackedProgram, idx: ResidentIndex,
+                       rows: int) -> _PallasChain:
+        if not self.pack:
+            raise ValueError("resident execution on the pallas backend "
+                             "requires pack=true (spec 'pallas:pack=true')")
+        return _PallasChain(self, mac, stage, recomb, idx, rows)
+
+
+def supports_resident(backend) -> bool:
+    """Whether ``backend`` can host a resident MAC chain. Stock policy:
+    numpy always (packed and unpacked interpreters both have kernel-only
+    entry points); jax/pallas only packed (the resident representation
+    *is* the 32-bit word-packed state). Custom backends opt in by
+    defining ``resident_chain``."""
+    if getattr(backend, "resident_chain", None) is None:
+        return False
+    if isinstance(backend, (JaxBackend, PallasBackend)):
+        return bool(backend.pack)
+    return True
 
 
 # -------------------------------------------------------------- registry ----

@@ -45,8 +45,9 @@ from repro import obs
 from repro.core.bits import from_bits, to_bits
 from repro.core.costmodel import CrossbarSpec
 
-from .backends import Backend, resolve_backend
-from .executable import BatchedExecutable, Executable, GroupedExecutable
+from .backends import Backend, resolve_backend, supports_resident
+from .executable import (BatchedExecutable, Executable, GroupedExecutable,
+                         ResidentExecutable)
 
 __all__ = ["Engine", "get_engine", "OP_KINDS", "DEFAULT_COSCHEDULE_K",
            "GroupSpec"]
@@ -64,6 +65,8 @@ OP_KINDS: Dict[str, str] = {
     "mac": "multpim_mac",
     "multpim_mac": "multpim_mac",
     "multpim_area": "multpim_area",
+    "stage": "stage",
+    "recomb": "recomb",
 }
 
 
@@ -124,6 +127,13 @@ class Engine:
         self.runs = 0
         self._batch_entries: Dict[Tuple, Tuple] = {}
         self._batch_lock = threading.Lock()
+        # inner_product's private ResidentExecutable memo, keyed
+        # (n, rows, backend): the chains are stateful (and the jax one
+        # carries jitted closures), so rebuilding per call would re-jit
+        # every inner product. Entries are reset before reuse; holders
+        # of long-lived chains (the serve batcher) build their own via
+        # resident() and are never handed these.
+        self._resident_memo: Dict[Tuple, ResidentExecutable] = {}
 
     # -------------------------------------------------------- compile ----
     def compile(self, op: str = "multpim", n: int = 16, *,
@@ -335,6 +345,54 @@ class Engine:
         return min(want, self.max_coschedule_k(op, n, flags=flags,
                                                config=config))
 
+    def resident(self, n: int, *, rows: int,
+                 backend: Union[None, str, Backend] = None,
+                 verify: bool = True) -> ResidentExecutable:
+        """``rows`` device-resident carry-save MAC chains (one per
+        crossbar row) — see
+        :class:`~repro.engine.executable.ResidentExecutable`.
+
+        Compiles the ``mac`` program plus its in-crossbar ``stage`` /
+        ``recomb`` companions (:mod:`repro.core.staging`) through the
+        shared cache and binds them to a backend chain that keeps the
+        accumulator state on the device between passes. The backend must
+        support resident execution (numpy always; jax/pallas with
+        ``pack=true`` — see
+        :func:`repro.engine.backends.supports_resident`).
+        """
+        bk = resolve_backend(backend, self.backend)
+        if not supports_resident(bk):
+            raise ValueError(
+                f"backend '{bk.name}' does not support resident "
+                f"execution (jax/pallas need pack=true, e.g. "
+                f"'jax:pack=true')")
+        with obs.span("engine.resident", n=n, rows=rows,
+                      backend=bk.name):
+            mac_e = self.cache.get_or_compile(
+                "multpim_mac", n, config=self.pass_config, verify=verify)
+            stage_e = self.cache.get_or_compile(
+                "stage", n, config=self.pass_config, verify=verify)
+            rec_e = self.cache.get_or_compile(
+                "recomb", n, config=self.pass_config, verify=verify)
+        return ResidentExecutable(mac_e, stage_e, rec_e, bk, rows,
+                                  crossbar=self.crossbar, engine=self)
+
+    def staging_cycles(self, n: int) -> int:
+        """Measured cycles of the compiled inter-pass ``stage`` program
+        — what one host round-trip between MAC passes actually costs
+        in-crossbar (strictly below the analytic
+        :func:`repro.core.matvec.STAGING_CYCLES` budget it replaced)."""
+        return self.cache.get_or_compile(
+            "stage", n, config=self.pass_config).program.n_cycles
+
+    def recomb_cycles(self, n: int) -> int:
+        """Measured cycles of the compiled ``recomb`` program at width
+        ``n`` — the final carry-save merge (and, at width ``2n``, one
+        chain-merge round of the co-scheduled path). Strictly below the
+        analytic ``5 * 2n`` ripple charge it replaced."""
+        return self.cache.get_or_compile(
+            "recomb", n, config=self.pass_config).program.n_cycles
+
     def _adhoc(self, op: str, n: int,
                backend: Union[None, str, Backend] = None) -> Executable:
         """Uncached raw build (benchmark baseline for the cache win)."""
@@ -384,7 +442,36 @@ class Engine:
 
     def _mac_inputs(self, n: int, a, b, s_i, c_i) -> Dict[str, np.ndarray]:
         """Marshal one MAC's integer operands into the program's bit
-        planes (sum/carry latch pre-loads + complemented u-stream)."""
+        planes (sum/carry latch pre-loads + complemented u-stream).
+
+        Fast path: for n <= 30 all legal values (operands < 2^n,
+        accumulators < 2^(2n)) fit int64, so the u-stream/latch
+        arithmetic and the bit-plane expansion vectorize end to end;
+        wider n (or inputs that overflow int64) take the exact
+        object-int path."""
+        if n <= 30:
+            try:
+                a64 = np.asarray(a, dtype=np.int64)
+                b64 = np.asarray(b, dtype=np.int64)
+                s64 = np.asarray(s_i, dtype=np.int64)
+                c64 = np.asarray(c_i, dtype=np.int64)
+            except (OverflowError, TypeError, ValueError):
+                pass
+            else:
+                u = (s64 >> n) + (c64 >> n)
+                if np.any(u >= np.int64(1) << n):
+                    raise OverflowError(
+                        "u-stream exceeds N bits (accumulator overflow)")
+                m = (np.int64(1) << n) - 1
+                c_lo_bits = to_bits(c64 & m, n)
+                return {
+                    "a": to_bits(a64, n),
+                    "b": to_bits(b64, n),
+                    "un": 1 - to_bits(u, n),
+                    "s_lo": to_bits(s64 & m, n),
+                    "c_lo": c_lo_bits,
+                    "c_lo_n": 1 - c_lo_bits,
+                }
         a = np.asarray(a, dtype=object)
         u = np.array([(int(s) >> n) + (int(c) >> n)
                       for s, c in zip(s_i, c_i)], dtype=object)
@@ -404,7 +491,18 @@ class Engine:
     @staticmethod
     def _mac_accumulate(n: int, out: Dict[str, np.ndarray]
                         ) -> Tuple[np.ndarray, np.ndarray]:
-        """MAC outputs -> next (s, c) carry-save accumulator state."""
+        """MAC outputs -> next (s, c) carry-save accumulator state
+        (exact python-int object arrays; int64-vectorized for n <= 30,
+        where s, c < 2^(2n) always fit)."""
+        if n <= 30:
+            w = np.int64(1) << np.arange(n, dtype=np.int64)
+            lo = np.asarray(out["lo"], dtype=np.int64) @ w
+            s_hi = np.asarray(out["s_hi"], dtype=np.int64) @ w
+            c_hi = np.asarray(out["c_hi"], dtype=np.int64) @ w
+            s = lo + (s_hi << n)
+            c = c_hi << n
+            return (np.array(s.tolist(), dtype=object),
+                    np.array(c.tolist(), dtype=object))
         lo, s_hi, c_hi = (from_bits(out["lo"]), from_bits(out["s_hi"]),
                           from_bits(out["c_hi"]))
         s = np.array([int(l) + (int(sh) << n)
@@ -421,13 +519,17 @@ class Engine:
     def inner_product(self, a_vec, x_vec, n: int, *,
                       use_compiler: bool = True,
                       backend: Union[None, str, Backend] = None,
-                      k: Optional[int] = None
+                      k: Optional[int] = None,
+                      resident: Optional[bool] = None
                       ) -> Tuple[np.ndarray, int]:
         """Full-precision fixed-point inner product per crossbar row.
 
         ``a_vec``/``x_vec``: (rows, n_elems) unsigned ints. Returns
         (rows,)-int result mod 2^(2n) and the total charged cycle count
-        (MAC cycles measured + staging budget + final recombination).
+        — all three segments (MAC passes, inter-pass staging, final
+        recombination) are *measured compiled* cycle counts now that
+        staging/recombination are real programs
+        (:mod:`repro.core.staging`), not analytic budgets.
 
         ``k`` is the co-scheduled MAC group size: the element stream is
         split into ``k`` *independent* carry-save accumulator chains
@@ -435,11 +537,16 @@ class Engine:
         are co-scheduled into one crossbar via :meth:`compile_batch` —
         ``ceil(E/k)`` crossbar passes instead of ``E``. Default
         (``None``): ``min(coschedule_k, n_elems)``. ``k=1`` forces the
-        sequential pre-coschedule path. ``use_compiler=False`` rebuilds
-        the raw program per call and stays sequential (the paper-parity
-        baseline, kept for benchmarking the cache and the co-scheduler).
+        single-chain path, which runs **device-resident**
+        (:meth:`resident`) whenever the backend supports it: one chain
+        per row, state on the device between passes, host traffic =
+        operand planes in + one drain out. ``resident`` overrides that
+        policy (``False`` forces the per-pass host round-trip even where
+        resident would apply; ``True`` asserts the resident path is
+        taken). ``use_compiler=False`` rebuilds the raw program per call
+        and stays sequential + round-trip (the paper-parity baseline,
+        kept for benchmarking the cache and the co-scheduler).
         """
-        from repro.core.matvec import STAGING_CYCLES
         a_vec = np.asarray(a_vec, dtype=object)
         R, E = a_vec.shape
         x_vec = np.asarray(x_vec, dtype=object)
@@ -449,10 +556,29 @@ class Engine:
                  if use_compiler else 1)
         k = max(1, min(int(k), E))
         mask = (1 << (2 * n)) - 1
+        bk = resolve_backend(backend, self.backend)
+
+        use_resident = (use_compiler and k == 1 and E >= 1
+                        and supports_resident(bk)
+                        if resident is None else bool(resident))
+        if use_resident:
+            if not (use_compiler and k == 1 and E >= 1):
+                raise ValueError("resident=True needs use_compiler=True, "
+                                 "k=1 and at least one element")
+            key = (n, R, bk)
+            rex = self._resident_memo.get(key)
+            if rex is None:
+                rex = self.resident(n, rows=R, backend=bk)
+                self._resident_memo[key] = rex
+            else:
+                rex.reset()
+            for e in range(E):
+                rex.step(a_vec[:, e], x_vec[:, e])
+            return rex.drain(), rex.chain_cycles(E)
 
         if not use_compiler or k == 1:
-            exe = (self.compile("mac", n, backend=backend) if use_compiler
-                   else self._adhoc("mac", n, backend=backend))
+            exe = (self.compile("mac", n, backend=bk) if use_compiler
+                   else self._adhoc("mac", n, backend=bk))
             s = np.zeros(R, dtype=object)
             c = np.zeros(R, dtype=object)
             cycles = 0
@@ -462,15 +588,15 @@ class Engine:
                 s, c = self._mac_accumulate(n, out)
                 cycles += exe.n_cycles
                 if e < E - 1:
-                    cycles += STAGING_CYCLES(n)
-            # Final recombination s + c, in-row ripple adder (5*(2N)).
-            cycles += 5 * (2 * n)
+                    cycles += self.staging_cycles(n)
+            # Final recombination s + c: the compiled in-row merge.
+            cycles += self.recomb_cycles(n)
             res = np.array([(int(x) + int(y)) & mask
                             for x, y in zip(s, c)], dtype=object)
             return res, cycles
 
         # Co-scheduled: k chains, one fused pass per element group.
-        bex = self.compile_batch("mac", n, k, backend=backend)
+        bex = self.compile_batch("mac", n, k, backend=bk)
         s = [np.zeros(R, dtype=object) for _ in range(k)]
         c = [np.zeros(R, dtype=object) for _ in range(k)]
         zeros = np.zeros(R, dtype=object)
@@ -485,17 +611,18 @@ class Engine:
                     a_vec[:, e] if e < E else zeros,
                     x_vec[:, e] if e < E else zeros,
                     s[j], c[j]))
-            outs = bex.run(group, backend=backend)
+            outs = bex.run(group, backend=bk)
             for j in range(k):
                 s[j], c[j] = self._mac_accumulate(n, outs[j])
             cycles += bex.n_cycles
             if p < passes - 1:
-                cycles += STAGING_CYCLES(n)
+                cycles += self.staging_cycles(n)
         # Chain merge + final recombination: the k partial (s + c) sums
         # ripple-add pairwise in ceil(log2 k) rounds (chains sit in
         # disjoint column ranges of the same rows, so each round is one
-        # in-row 5*(2N) ripple), plus the usual final s+c recombination.
-        cycles += 5 * (2 * n) * (1 + math.ceil(math.log2(k)))
+        # in-row 2N-wide compiled merge), plus the usual final s+c
+        # recombination — also a 2N-wide merge.
+        cycles += self.recomb_cycles(2 * n) * (1 + math.ceil(math.log2(k)))
         res = np.array(
             [sum(int(s[j][r]) + int(c[j][r]) for j in range(k)) & mask
              for r in range(R)], dtype=object)
@@ -503,16 +630,18 @@ class Engine:
 
     def matvec(self, A, x, n: int, *, use_compiler: bool = True,
                backend: Union[None, str, Backend] = None,
-               k: Optional[int] = None) -> Tuple[np.ndarray, int]:
+               k: Optional[int] = None,
+               resident: Optional[bool] = None) -> Tuple[np.ndarray, int]:
         """A (m, e) ints, x (e,) ints -> (m,) inner products (each row is
         an independent crossbar row, exactly the paper's Fig. 5 layout;
-        ``k`` co-schedules the per-row MAC stream — see
+        ``k`` co-schedules the per-row MAC stream and ``resident``
+        selects the device-resident chain path — see
         :meth:`inner_product`)."""
         A = np.asarray(A, dtype=object)
         m, e = A.shape
         X = np.tile(np.asarray(x, dtype=object)[None, :], (m, 1))
         return self.inner_product(A, X, n, use_compiler=use_compiler,
-                                  backend=backend, k=k)
+                                  backend=backend, k=k, resident=resident)
 
     def linear(self, x, w, b=None, *, n_bits: int = 8, mode: str = "pim",
                use_pallas: bool = False):

@@ -29,11 +29,11 @@ from repro import obs
 from repro.core.bits import from_bits, to_bits
 from repro.core.costmodel import CrossbarSpec
 
-from .backends import (Backend, PallasBackend, autotune_row_block,
-                       resolve_backend)
+from .backends import (Backend, PallasBackend, ResidentIndex,
+                       autotune_row_block, resolve_backend)
 
 __all__ = ["Executable", "GroupedExecutable", "BatchedExecutable",
-           "ExecCost"]
+           "ResidentExecutable", "ExecCost"]
 
 
 @dataclass(frozen=True)
@@ -387,6 +387,202 @@ class GroupedExecutable:
                         grp[name] = val
                     results.append(grp)
                 return results
+
+
+class ResidentExecutable:
+    """``rows`` parallel carry-save MAC chains living on device state.
+
+    Produced by :meth:`repro.engine.Engine.resident`. Where the
+    round-trip path unmarshals every MAC pass's ``(lo, s_hi, c_hi)``
+    planes to host integers, re-derives the next pass's latch pre-loads
+    in Python, and re-marshals them back in, a resident executable keeps
+    the whole accumulator in crossbar state: the compiled ``stage``
+    program (:mod:`repro.core.staging`) restages ``un``/``s_lo`` in
+    place, so :meth:`step` ships only the *new* operand bit planes
+    ``(a, b)`` (plus a one-bit-per-lane fresh mask) and :meth:`drain`
+    runs the compiled ``recomb`` program and unpacks its 2N-bit ``out``
+    planes exactly once per chain. On the packed jax backend the column
+    moves, the stage scan, the fresh-lane masks and the MAC scan fuse
+    into one jitted dispatch per pass and the state never leaves the
+    device between passes.
+
+    Each crossbar row is an **independent** chain (a serve slot, a
+    matvec output row). ``fresh`` lanes restart accumulation at 0 while
+    their neighbours keep accumulating — the masks set ``un = all-ones``
+    and ``s_lo = 0`` for exactly those lanes (``c_lo = 0`` / ``c_lo_n =
+    all-ones`` are every pass's state initialization). :meth:`drain` is
+    non-destructive: it reads the live carry-save pair into a separate
+    recombination state, so a continuous batcher drains finishing lanes
+    mid-chain without disturbing the rest.
+
+    Overflow semantics differ from the host path by design: the stage
+    ripple wraps the u-stream mod ``2^N`` silently where
+    :meth:`Engine.mac_inputs` raises :class:`OverflowError`. Callers
+    keep the usual no-overflow precondition (the running inner product
+    fits in 2N bits).
+    """
+
+    def __init__(self, mac_entry: "CompiledEntry",
+                 stage_entry: "CompiledEntry",
+                 recomb_entry: "CompiledEntry",
+                 backend: Backend, rows: int,
+                 crossbar: CrossbarSpec = CrossbarSpec(),
+                 engine: "Optional[Engine]" = None):
+        if rows < 1:
+            raise ValueError("rows >= 1")
+        self.mac_entry = mac_entry
+        self.stage_entry = stage_entry
+        self.recomb_entry = recomb_entry
+        self.backend = backend
+        self.rows = rows
+        self.crossbar = crossbar
+        self.engine = engine
+        self.n = mac_entry.key.n
+        self.index = self._build_index()
+        self.chain = backend.resident_chain(
+            mac_entry.packed, stage_entry.packed, recomb_entry.packed,
+            self.index, rows)
+        self._dev = None
+        self.passes = 0
+
+    def _build_index(self) -> ResidentIndex:
+        mi = self.mac_entry.program.input_map
+        mo = self.mac_entry.program.output_map
+        si = self.stage_entry.program.input_map
+        so = self.stage_entry.program.output_map
+        ri = self.recomb_entry.program.input_map
+        ro = self.recomb_entry.program.output_map
+
+        def cols(m, *names):
+            return np.asarray(sum((list(m[x]) for x in names), []),
+                              dtype=np.int64)
+
+        return ResidentIndex(
+            c_mac=self.mac_entry.packed.init_mask.shape[1],
+            c_stage=self.stage_entry.packed.init_mask.shape[1],
+            c_rec=self.recomb_entry.packed.init_mask.shape[1],
+            ab_cols=cols(mi, "a", "b"),
+            un_cols=cols(mi, "un"),
+            slo_cols=cols(mi, "s_lo"),
+            cn_cols=cols(mi, "c_lo_n"),
+            stage_src=cols(mo, "s_hi", "c_hi", "lo"),
+            stage_dst=cols(si, "s_hi", "c_hi", "lo"),
+            mac_src=cols(so, "un", "s_lo"),
+            mac_dst=cols(mi, "un", "s_lo"),
+            rec_dst=cols(ri, "s_hi", "c_hi", "lo"),
+            rec_out=cols(ro, "out"))
+
+    # ---------------------------------------------------------- views ----
+    @property
+    def mac_cycles(self) -> int:
+        return self.mac_entry.program.n_cycles
+
+    @property
+    def stage_cycles(self) -> int:
+        return self.stage_entry.program.n_cycles
+
+    @property
+    def recomb_cycles(self) -> int:
+        return self.recomb_entry.program.n_cycles
+
+    @property
+    def pass_cycles(self) -> int:
+        """Steady-state cycles per MAC pass: inter-pass restage + MAC
+        (the first pass has no restage; :meth:`chain_cycles` accounts a
+        whole chain)."""
+        return self.stage_cycles + self.mac_cycles
+
+    def chain_cycles(self, n_passes: int) -> int:
+        """Total charged cycles for an ``n_passes``-element chain
+        including the final recombination — the measured-compiled
+        replacement for ``E*mac + (E-1)*STAGING + 5*(2N)``."""
+        if n_passes < 1:
+            return self.recomb_cycles
+        return (n_passes * self.mac_cycles
+                + (n_passes - 1) * self.stage_cycles + self.recomb_cycles)
+
+    def __repr__(self) -> str:
+        return (f"ResidentExecutable(n={self.n}, rows={self.rows}, "
+                f"backend={self.backend.name}, "
+                f"{self.pass_cycles} cycles/pass)")
+
+    def cost(self) -> ExecCost:
+        """Steady-state per-pass cost; ``programs=rows`` (each crossbar
+        row is one MAC chain, so ``cycles_per_program`` is the
+        cycles-per-MAC figure). Memristor/partition footprint covers the
+        stage + MAC states that coexist across one pass."""
+        mac_p = self.mac_entry.program
+        stg_p = self.stage_entry.program
+        gates = sum(len(c.ops) for c in mac_p.cycles)
+        gates += sum(len(c.ops) for c in stg_p.cycles)
+        return ExecCost(
+            cycles=self.pass_cycles,
+            memristors=mac_p.n_memristors + stg_p.n_memristors,
+            partitions=max(mac_p.n_partitions, stg_p.n_partitions),
+            latency_us=self.pass_cycles * self.crossbar.cycle_ns / 1e3,
+            energy_uj=gates * self.crossbar.energy_pj_per_gate / 1e6,
+            programs=self.rows,
+            pack=getattr(self.backend, "pack", False))
+
+    # ------------------------------------------------------------ run ----
+    def _operand_planes(self, a, b) -> np.ndarray:
+        n = self.n
+        pa = to_bits(np.asarray(a), n)
+        pb = to_bits(np.asarray(b), n)
+        if pa.shape != (self.rows, n) or pb.shape != (self.rows, n):
+            raise ValueError(
+                f"expected {self.rows} operand rows, got a: {pa.shape}, "
+                f"b: {pb.shape}")
+        return np.concatenate([pa, pb], axis=1)
+
+    def step(self, a, b, fresh: Optional[np.ndarray] = None) -> None:
+        """Advance every lane one MAC pass: ``acc += a * b`` per row.
+
+        ``a``/``b`` are ``(rows,)`` integers (marshalled to planes here
+        — the only host->device traffic of a pass); ``fresh`` is an
+        optional ``(rows,)`` bool mask of lanes that restart at 0 this
+        pass. The first step implicitly treats every lane as fresh.
+        """
+        planes = self._operand_planes(a, b)
+        if self._dev is None:
+            with obs.span("exec.load", backend=self.backend.name,
+                          rows=self.rows, n=self.n,
+                          modeled_cycles=self.mac_cycles):
+                self._dev = self.chain.first(planes)
+        else:
+            if fresh is None:
+                fresh = np.zeros(self.rows, dtype=bool)
+            else:
+                fresh = np.asarray(fresh, dtype=bool)
+                if fresh.shape != (self.rows,):
+                    raise ValueError(f"fresh mask shape {fresh.shape}, "
+                                     f"expected ({self.rows},)")
+            with obs.span("exec.step", backend=self.backend.name,
+                          rows=self.rows, n=self.n,
+                          modeled_cycles=self.pass_cycles):
+                self._dev = self.chain.step(self._dev, planes, fresh)
+        self.passes += 1
+        if self.engine is not None:
+            self.engine.runs += 1
+
+    def drain(self) -> np.ndarray:
+        """Recombine the live carry-save state: ``(rows,)`` exact ints,
+        each lane's accumulated ``sum(a_i * b_i) mod 2^(2N)``.
+        Non-destructive — lanes keep accumulating afterwards."""
+        if self._dev is None:
+            raise RuntimeError("no live chain state to drain (call step "
+                               "at least once)")
+        with obs.span("exec.drain", backend=self.backend.name,
+                      rows=self.rows, n=self.n,
+                      modeled_cycles=self.recomb_cycles):
+            bits = self.chain.drain(self._dev)
+            return from_bits(np.asarray(bits, dtype=np.uint8))
+
+    def reset(self) -> None:
+        """Forget the live state; the next :meth:`step` starts a fresh
+        chain in every lane."""
+        self._dev = None
+        self.passes = 0
 
 
 class BatchedExecutable(GroupedExecutable):

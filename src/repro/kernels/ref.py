@@ -24,6 +24,7 @@ from repro.core.executor import PackedProgram, gate_eval_packed
 from repro.core.isa import Gate
 
 __all__ = ["crossbar_run_ref", "crossbar_run_ref_packed",
+           "packed_scan_body", "packed_device_tables",
            "bitserial_matmul_ref"]
 
 
@@ -58,8 +59,14 @@ def crossbar_run_ref(state_bits: jnp.ndarray, packed: PackedProgram
     return st[:, :state_bits.shape[1]]
 
 
-@functools.partial(jax.jit, static_argnames=("factor",))
-def _packed_scan(st, gate_id, in_cols, out_col, init_words, *, factor: int):
+def packed_scan_body(st, gate_id, in_cols, out_col, init_words, *,
+                     factor: int):
+    """The packed-scan computation itself, **not** jitted — composable
+    inside larger jitted programs (the resident execution path fuses
+    stage + MAC scans plus the inter-pass column moves into a single
+    dispatch). ``st`` is ``(W, C)`` uint32 words at the full packed
+    table width; the table args come from :func:`packed_device_tables`.
+    """
     def step(st, tabs):
         gids, icss, ocss, inis = tabs
         for j in range(factor):
@@ -83,6 +90,30 @@ def _packed_scan(st, gate_id, in_cols, out_col, init_words, *, factor: int):
     return st
 
 
+_packed_scan = functools.partial(jax.jit,
+                                 static_argnames=("factor",))(packed_scan_body)
+
+
+def packed_device_tables(packed: PackedProgram, macro: int = 1):
+    """``(tables, factor)`` for :func:`packed_scan_body`: the macro-fused
+    dense tables as device arrays, memoized per ``(program, factor)`` on
+    the packed object — decode traffic re-runs the same program, so the
+    host->device upload happens once, and jit caches keyed on these
+    arrays stay warm across calls."""
+    from repro.compiler.macrocycle import fuse_macrocycles
+    mt = fuse_macrocycles(packed, macro)
+    cache = getattr(packed, "_jax_table_cache", None)
+    if cache is None:
+        cache = {}
+        packed._jax_table_cache = cache
+    tabs = cache.get(mt.factor)
+    if tabs is None:
+        tabs = (jnp.asarray(mt.gate_id), jnp.asarray(mt.in_cols),
+                jnp.asarray(mt.out_col), jnp.asarray(mt.init_words))
+        cache[mt.factor] = tabs
+    return tabs, mt.factor
+
+
 def crossbar_run_ref_packed(state_words: jnp.ndarray, packed: PackedProgram,
                             macro: int = 1) -> jnp.ndarray:
     """Bit-plane packed lax.scan executor (see module docstring).
@@ -93,24 +124,10 @@ def crossbar_run_ref_packed(state_words: jnp.ndarray, packed: PackedProgram,
     ``macro`` is the macro-cycle fusion factor: the scan runs over
     ``ceil(T/macro)`` fused steps, each unrolling ``macro`` cycles.
     """
-    from repro.compiler.macrocycle import fuse_macrocycles
-    mt = fuse_macrocycles(packed, macro)
-    # Device-resident tables memoized next to the macro tables: decode
-    # traffic re-runs the same program, so the host->device upload of
-    # the ~6 table arrays must happen once per (program, factor), not
-    # per call.
-    cache = getattr(packed, "_jax_table_cache", None)
-    if cache is None:
-        cache = {}
-        packed._jax_table_cache = cache
-    tabs = cache.get(mt.factor)
-    if tabs is None:
-        tabs = (jnp.asarray(mt.gate_id), jnp.asarray(mt.in_cols),
-                jnp.asarray(mt.out_col), jnp.asarray(mt.init_words))
-        cache[mt.factor] = tabs
+    tabs, factor = packed_device_tables(packed, macro)
     pad = packed.init_mask.shape[1] - state_words.shape[1]
     st = jnp.pad(state_words.astype(jnp.uint32), ((0, 0), (0, pad)))
-    st = _packed_scan(st, *tabs, factor=mt.factor)
+    st = _packed_scan(st, *tabs, factor=factor)
     return st[:, :state_words.shape[1]]
 
 

@@ -7,13 +7,17 @@ Traffic mode (``--traffic N``) skips the model build entirely and runs
 the :mod:`repro.serve` continuous-batching scheduler against a seeded
 Poisson trace of N generate requests — admission control, dynamic-K
 grouped passes, SLO percentiles from :mod:`repro.obs`. With
-``--traffic-compare`` the same trace replays under serial
-one-request-at-a-time scheduling and the driver reports the speedup;
-``--traffic-check X`` turns that into a hard gate (speedup >= X, zero
-recompiles after warmup, bit-identical tokens across schedules):
+``--traffic-compare`` the same trace replays under per-pass host
+round-trip and serial one-request-at-a-time scheduling and the driver
+reports both speedups; ``--traffic-check X`` turns the serial ratio
+into a hard gate and ``--traffic-resident-check X`` gates the
+continuous-over-roundtrip ratio of the device-resident lane path (both
+also require zero recompiles after warmup and bit-identical tokens
+across schedules):
 
   PYTHONPATH=src python -m repro.launch.serve --traffic 16 \
-      --pim-backend numpy:pack=true --traffic-check 3.0 \
+      --pim-backend jax:pack=true --traffic-check 3.0 \
+      --traffic-resident-check 2.0 \
       --trace /tmp/serve_load.json --metrics /tmp/serve_load_metrics.json
 
 PIM offload: in smoke mode (or with ``--pim``) the LM-head linear runs
@@ -146,19 +150,33 @@ def _run_traffic(args) -> None:
 
     common = dict(n_bits=n, decode_elems=elems, max_slots=max_slots,
                   priority=args.traffic_priority)
-    if args.traffic_compare or args.traffic_check is not None:
+    gating = (args.traffic_check is not None
+              or args.traffic_resident_check is not None)
+    if args.traffic_compare or gating:
         res = compare_modes(engine, reqs, **common)
-        cont, ser = res["continuous"], res["serial"]
+        cont, rt, ser = res["continuous"], res["roundtrip"], res["serial"]
         _log_report(cont)
+        _log_report(rt)
         _log_report(ser)
-        log.info("continuous batching speedup: %.2fx over serial "
-                 "(tokens_match=%s)", res["speedup"], res["tokens_match"])
+        log.info("continuous batching speedup: %.2fx over serial, "
+                 "%.2fx over per-pass round-trip (tokens_match=%s)",
+                 res["speedup"], res["resident_speedup"],
+                 res["tokens_match"])
         obs.gauge("serve.load.speedup").set(res["speedup"])
-        if args.traffic_check is not None:
+        obs.gauge("serve.load.resident_speedup").set(
+            res["resident_speedup"])
+        if gating:
             fails = []
-            if res["speedup"] < args.traffic_check:
+            if (args.traffic_check is not None
+                    and res["speedup"] < args.traffic_check):
                 fails.append(f"speedup {res['speedup']:.2f}x < "
-                             f"{args.traffic_check:.2f}x")
+                             f"{args.traffic_check:.2f}x over serial")
+            if (args.traffic_resident_check is not None
+                    and res["resident_speedup"]
+                    < args.traffic_resident_check):
+                fails.append(
+                    f"resident speedup {res['resident_speedup']:.2f}x < "
+                    f"{args.traffic_resident_check:.2f}x over round-trip")
             if cont.recompiles != 0:
                 fails.append(f"recompiles after warmup = {cont.recompiles}")
             if not res["tokens_match"]:
@@ -166,9 +184,9 @@ def _run_traffic(args) -> None:
             if fails:
                 raise SystemExit("serve load gate FAILED: "
                                  + "; ".join(fails))
-            log.info("serve load gate passed: %.2fx >= %.2fx, zero "
-                     "recompiles, bit-exact", res["speedup"],
-                     args.traffic_check)
+            log.info("serve load gate passed: %.2fx over serial, %.2fx "
+                     "over round-trip, zero recompiles, bit-exact",
+                     res["speedup"], res["resident_speedup"])
     else:
         cont = run_load(engine, reqs, mode="continuous", **common)
         _log_report(cont)
@@ -248,8 +266,16 @@ def main() -> None:
                     metavar="X",
                     help="hard gate (implies --traffic-compare): exit "
                          "nonzero unless speedup >= X, recompiles after "
-                         "warmup == 0, and both schedules emit "
+                         "warmup == 0, and all schedules emit "
                          "bit-identical tokens")
+    ap.add_argument("--traffic-resident-check", type=float, default=None,
+                    metavar="X",
+                    help="hard gate on the device-resident path (implies "
+                         "--traffic-compare): exit nonzero unless "
+                         "resident continuous batching is >= X faster "
+                         "than the per-pass host round-trip on the same "
+                         "trace (plus the zero-recompile and bit-parity "
+                         "checks)")
     ap.add_argument("--trace", default=None, metavar="OUT.json",
                     help="enable span tracing and write a Chrome "
                          "trace-event file (open in chrome://tracing or "

@@ -182,6 +182,10 @@ class LinearGroup:
     cols_used: int
     n_bits: int
     staging_cycles: int
+    # Measured cycle count of one compiled 2n-bit recombination program
+    # (the merge-tree rung). 0 means "no engine pass" (deserialized
+    # metrics) — fall back to the analytic 5*(2n) ripple-add budget.
+    recomb_cycles: int = 0
     # The compiled GroupedExecutable behind this group (None for plans
     # built without an engine pass, e.g. deserialized metrics). Serve's
     # --trace path reads its fused program/packed tables to emit the
@@ -209,7 +213,8 @@ class LinearGroup:
         carry-save chain merge / final recombination (in-row ripple
         adds, chains sit in disjoint column ranges of the same rows)."""
         p = self.passes_per_token
-        recomb = 5 * (2 * self.n_bits) * (
+        base = self.recomb_cycles or 5 * (2 * self.n_bits)
+        recomb = base * (
             1 + max(math.ceil(math.log2(c)) if c > 1 else 0
                     for c in self.chains))
         return p * self.pass_cycles + (p - 1) * self.staging_cycles + recomb
@@ -307,7 +312,6 @@ def plan_block(cfg, engine=None,
     memoized weight-stationary layout, so serving pays compilation
     exactly once per (scope, width).
     """
-    from repro.core.matvec import STAGING_CYCLES
     from repro.engine import GroupSpec, get_engine
     eng = engine if engine is not None else get_engine()
     scopes = cfg.pim_scopes() if scopes is None else scopes
@@ -337,7 +341,8 @@ def plan_block(cfg, engine=None,
                     scope=scope, linears=part, chains=chains,
                     pass_cycles=gex.n_cycles,
                     cols_used=sum(p.n_cols for p in gex.placements),
-                    n_bits=n, staging_cycles=STAGING_CYCLES(n),
+                    n_bits=n, staging_cycles=eng.staging_cycles(n),
+                    recomb_cycles=eng.recomb_cycles(2 * n),
                     executable=gex))
         sp.set(groups=len(plan.groups),
                cycles_per_token=plan.cycles_per_token)

@@ -11,14 +11,24 @@ per-op scatter/gather slots carry the live sequences, and (5) scatters
 results back, emitting tokens and freeing the slots of finished
 sequences mid-stream.
 
-The co-scheduled group is the slot substrate: a sequence joining or
-leaving only changes which operand set rides which slot of an
-already-fused program — the K-rung executables are memoized on the
-engine (:meth:`Engine.compile_batch`) and precompiled by
+The default execution substrate is **device-resident** (``resident``):
+slots map to packed crossbar *rows* (lanes) of one
+:class:`~repro.engine.executable.ResidentExecutable`, the carry-save
+accumulators live in device state between passes, and a scheduler step
+ships only each live slot's new ``(a, b)`` element pair plus a one-bit
+fresh mask — no per-pass unmarshal/re-marshal of ``(s, c)``, no
+``backend.unpack`` between passes, and a drain only on steps where some
+lane finishes a token. ``resident=False`` keeps the co-scheduled
+column-slot round-trip path (the PR7 baseline the speedup gate compares
+against, and the fallback for backends without resident support).
+
+In both modes a sequence joining or leaving is a slot-assignment change,
+never a recompile: the K-rung executables / the resident program triple
+are memoized on the engine and precompiled by
 :meth:`ContinuousBatcher.warmup`, so steady-state serving performs
 **zero recompiles** (the load harness and the CI smoke scenario both
-enforce this). Idle slots of a rung pad with zero operands; their
-columns still cycle but touch nothing observable.
+enforce this). Idle slots pad with zero operands; their columns/lanes
+still cycle but touch nothing observable.
 """
 from __future__ import annotations
 
@@ -29,6 +39,7 @@ from typing import List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro import obs
+from repro.engine.backends import resolve_backend, supports_resident
 
 from .request import AdmissionController, Request, RequestQueue
 from .sequence import DECODE_ELEMS, SequenceState, zero_operands
@@ -58,6 +69,14 @@ class ContinuousBatcher:
     deprecated ``--pim-k`` override does); ``max_slots=1`` with
     ``ladder=(1,)`` degenerates to serial one-request-at-a-time serving
     — the baseline the speedup gate compares against.
+
+    ``resident`` selects the execution substrate: ``None`` (default)
+    uses the device-resident lane path whenever the backend supports it
+    (:func:`repro.engine.backends.supports_resident`) and falls back to
+    the round-trip path otherwise; ``True`` requires it; ``False``
+    forces the round-trip path. In resident mode the pass width is
+    always ``max_slots`` lanes (dynamic K does not apply — an idle lane
+    costs one packed bit, not a column range).
     """
 
     def __init__(self, engine, queue: Optional[RequestQueue] = None, *,
@@ -66,6 +85,7 @@ class ContinuousBatcher:
                  ladder: Optional[Sequence[int]] = None,
                  priority: str = "prefill",
                  backend: Union[None, str, object] = None,
+                 resident: Optional[bool] = None,
                  clock=time.perf_counter):
         self.engine = engine
         self.queue = queue if queue is not None else RequestQueue()
@@ -73,6 +93,17 @@ class ContinuousBatcher:
         self.decode_elems = decode_elems
         self.backend = backend
         self.clock = clock
+        bk = resolve_backend(backend, engine.backend)
+        if resident is None:
+            self.resident = supports_resident(bk)
+        else:
+            self.resident = bool(resident)
+            if self.resident and not supports_resident(bk):
+                raise ValueError(
+                    f"resident=True but backend '{bk.name}' does not "
+                    f"support resident execution (jax/pallas need "
+                    f"pack=true)")
+        self._rex = None              # ResidentExecutable, built lazily
         if ladder is None:
             ladder = engine.k_ladder("mac", n_bits, max_k=max_slots)
         self.ladder: Tuple[int, ...] = tuple(sorted(set(int(k)
@@ -103,13 +134,31 @@ class ContinuousBatcher:
         self._h_wait = obs.windowed_histogram("serve.sched.queue_wait_us")
 
     # -------------------------------------------------------- compile ----
+    def _resident_exe(self):
+        if self._rex is None:
+            self._rex = self.engine.resident(self.n, rows=self.max_slots,
+                                             backend=self.backend)
+        return self._rex
+
     def warmup(self) -> None:
-        """Precompile every K-rung's fused executable (memoized on the
-        engine), so no scheduler step ever compiles. Call once before
-        taking traffic; the zero-recompile gate measures from here."""
-        with obs.span("serve.sched.warmup", ladder=str(self.ladder)):
-            for k in self.ladder:
-                self.engine.compile_batch("mac", self.n, k)
+        """Precompile the execution substrate so no scheduler step ever
+        compiles: every K-rung's fused executable in round-trip mode,
+        the mac/stage/recomb program triple (plus a throwaway
+        load/step/drain to warm the backend's jit caches) in resident
+        mode. Call once before taking traffic; the zero-recompile gate
+        measures from here."""
+        with obs.span("serve.sched.warmup", ladder=str(self.ladder),
+                      resident=self.resident):
+            if self.resident:
+                rex = self._resident_exe()
+                z = np.zeros(self.max_slots, dtype=np.int64)
+                rex.step(z, z)
+                rex.step(z, z, fresh=np.ones(self.max_slots, dtype=bool))
+                rex.drain()
+                rex.reset()
+            else:
+                for k in self.ladder:
+                    self.engine.compile_batch("mac", self.n, k)
 
     # ----------------------------------------------------------- state ----
     @property
@@ -159,6 +208,87 @@ class ContinuousBatcher:
             self._m_occ.set(0.0)
             return st
 
+        if self.resident:
+            self._step_resident(st, seqs)
+        else:
+            self._step_roundtrip(st, seqs)
+
+        if st.tokens:
+            self.tokens_emitted += st.tokens
+            self._m_tok.inc(st.tokens)
+        self._m_qd.set(st.queue_depth)
+        self._m_occ.set(st.live / self.max_slots)
+        self._m_k.set(st.k)
+        obs.track("serve.sched", queue_depth=st.queue_depth,
+                  live=st.live, k=st.k)
+        return st
+
+    def _note_token(self, st: StepStats, slot: int, seq: SequenceState,
+                    t_emit: float) -> None:
+        """Per-token bookkeeping shared by both substrates: latency
+        histograms, TTFT, eviction of finished sequences (their slots
+        backfill next step, mid-stream for the survivors)."""
+        st.tokens += 1
+        req = seq.req
+        # Per-token latency: time since this request's previous token;
+        # token 0 anchors at admission (TTFT covers the queue wait and
+        # is tracked separately).
+        anchor = (req.t_last_tok if req.t_last_tok is not None
+                  else req.t_admit)
+        if anchor is not None:
+            self._h_tok.observe((t_emit - anchor) * 1e6)
+        req.t_last_tok = t_emit
+        if req.t_first is None:
+            req.t_first = t_emit
+            if req.t_submit is not None:
+                self._h_ttft.observe((t_emit - req.t_submit) * 1e6)
+        if seq.finished:
+            req.t_done = t_emit
+            self.slots[slot] = None
+            st.finished.append(req.rid)
+            self.finished_reqs.append(req)
+            obs.instant("serve.finish", rid=req.rid, slot=slot,
+                        tokens=len(req.tokens))
+
+    def _step_resident(self, st: StepStats, seqs) -> None:
+        """One resident pass: slots are packed crossbar lanes of a
+        single :class:`ResidentExecutable` — ship each live slot's new
+        ``(a, b)`` element, mark stream-start lanes fresh, advance every
+        lane in place, and drain (one device read) only on steps where
+        some lane finishes its token's stream. Idle lanes carry zero
+        operands; an evicted lane's stale state is reset by the fresh
+        mask the moment a new sequence lands on it."""
+        st.k = self.max_slots
+        rex = self._resident_exe()
+        with obs.span("serve.sched.step", live=st.live, k=st.k,
+                      queue_depth=st.queue_depth, resident=True):
+            a = np.zeros(self.max_slots, dtype=np.int64)
+            b = np.zeros(self.max_slots, dtype=np.int64)
+            fresh = np.zeros(self.max_slots, dtype=bool)
+            boundary = set()
+            for slot, seq in seqs:
+                ai, bi, _, _ = seq.mac_operands()
+                a[slot] = ai
+                b[slot] = bi
+                fresh[slot] = seq.at_stream_start
+                if seq.steps_left == 1:
+                    boundary.add(slot)
+            rex.step(a, b, fresh=fresh)
+            self.passes += 1
+            self._m_pass.inc()
+
+            drained = rex.drain() if boundary else None
+            t_emit = self.clock()
+            for slot, seq in seqs:
+                val = int(drained[slot]) if slot in boundary else None
+                tok = seq.advance_resident(val)
+                if tok is not None:
+                    self._note_token(st, slot, seq, t_emit)
+
+    def _step_roundtrip(self, st: StepStats, seqs) -> None:
+        """One co-scheduled round-trip pass (the PR7 path): marshal every
+        live slot's full latch state in, one fused K-wide pass, unmarshal
+        and fold ``(s, c)`` back on the host."""
         k = self._choose_k(st.live)
         st.k = k
         with obs.span("serve.sched.step", live=st.live, k=k,
@@ -190,46 +320,13 @@ class ContinuousBatcher:
             self._m_pass.inc()
 
             # Scatter: fold each slot's MAC result back into its
-            # sequence; emit tokens; evict finished sequences (their
-            # slots backfill next step, mid-stream for the survivors).
+            # sequence and emit tokens.
             t_emit = self.clock()
             for (slot, seq), out in zip(seqs, outs):
                 s, c = self.engine.mac_accumulate(self.n, out)
                 tok = seq.absorb(int(s[0]), int(c[0]))
-                if tok is None:
-                    continue
-                st.tokens += 1
-                req = seq.req
-                # Per-token latency: time since this request's previous
-                # token; token 0 anchors at admission (TTFT covers the
-                # queue wait and is tracked separately).
-                anchor = (req.t_last_tok if req.t_last_tok is not None
-                          else req.t_admit)
-                if anchor is not None:
-                    self._h_tok.observe((t_emit - anchor) * 1e6)
-                req.t_last_tok = t_emit
-                if req.t_first is None:
-                    req.t_first = t_emit
-                    if req.t_submit is not None:
-                        self._h_ttft.observe(
-                            (t_emit - req.t_submit) * 1e6)
-                if seq.finished:
-                    req.t_done = t_emit
-                    self.slots[slot] = None
-                    st.finished.append(req.rid)
-                    self.finished_reqs.append(req)
-                    obs.instant("serve.finish", rid=req.rid, slot=slot,
-                                tokens=len(req.tokens))
-
-        if st.tokens:
-            self.tokens_emitted += st.tokens
-            self._m_tok.inc(st.tokens)
-        self._m_qd.set(st.queue_depth)
-        self._m_occ.set(st.live / self.max_slots)
-        self._m_k.set(st.k)
-        obs.track("serve.sched", queue_depth=st.queue_depth,
-                  live=st.live, k=st.k)
-        return st
+                if tok is not None:
+                    self._note_token(st, slot, seq, t_emit)
 
     # ------------------------------------------------------------ drain ----
     def run_until_idle(self, max_steps: int = 1_000_000) -> int:

@@ -9,10 +9,13 @@ percentiles (steady-state window, warmup excluded), queue wait, and the
 engine's compile count delta after warmup (the zero-recompile gate).
 
 :func:`compare_modes` replays the *same* trace (via
-:meth:`Request.fresh`) under continuous batching and under serial
-one-request-at-a-time scheduling (``max_slots=1`` — what serving looked
-like before this subsystem), checks both modes emit bit-identical
-tokens, and reports the throughput speedup the acceptance gate demands.
+:meth:`Request.fresh`) under resident continuous batching
+(``continuous``), the per-pass host round-trip it replaced
+(``roundtrip``), and serial one-request-at-a-time scheduling
+(``serial`` — what serving looked like before this subsystem), checks
+all modes emit bit-identical tokens, and reports both throughput ratios
+the acceptance gates demand (continuous/serial and
+continuous/roundtrip).
 """
 from __future__ import annotations
 
@@ -75,20 +78,27 @@ def run_load(engine, requests: List[Request], *, mode: str = "continuous",
              realtime: bool = True) -> LoadReport:
     """Replay ``requests`` (a generated trace) and measure.
 
-    ``mode="continuous"`` serves with dynamic-K continuous batching;
-    ``mode="serial"`` pins ``max_slots=1, ladder=(1,)`` — the
-    one-request-at-a-time baseline. ``realtime=False`` ignores arrival
-    stamps and enqueues everything up front (pure throughput mode, used
-    by tests to stay deterministic under slow CI machines).
+    ``mode="continuous"`` serves with continuous batching on the
+    device-resident lane path (falling back to round-trip only when the
+    backend cannot host resident chains); ``mode="roundtrip"`` forces
+    the dynamic-K co-scheduled host round-trip path (the pre-resident
+    substrate, kept as the speedup baseline); ``mode="serial"`` pins
+    ``max_slots=1, ladder=(1,)`` — the one-request-at-a-time baseline.
+    ``realtime=False`` ignores arrival stamps and enqueues everything up
+    front (pure throughput mode, used by tests to stay deterministic
+    under slow CI machines).
     """
-    if mode not in ("continuous", "serial"):
-        raise ValueError(f"mode {mode!r} not in ('continuous', 'serial')")
+    if mode not in ("continuous", "roundtrip", "serial"):
+        raise ValueError(
+            f"mode {mode!r} not in ('continuous', 'roundtrip', 'serial')")
     reqs = sorted((r.fresh() for r in requests), key=lambda r: r.arrival)
     queue = RequestQueue()
     kwargs = dict(n_bits=n_bits, decode_elems=decode_elems,
                   priority=priority, backend=backend)
     if mode == "serial":
-        kwargs.update(max_slots=1, ladder=(1,))
+        kwargs.update(max_slots=1, ladder=(1,), resident=False)
+    elif mode == "roundtrip":
+        kwargs.update(max_slots=max_slots, resident=False)
     else:
         kwargs.update(max_slots=max_slots)
     b = ContinuousBatcher(engine, queue, **kwargs)
@@ -156,22 +166,33 @@ def compare_modes(engine, requests: List[Request], *,
                   priority: str = "prefill",
                   backend: Union[None, str, object] = None,
                   realtime: bool = True) -> Dict[str, object]:
-    """Replay one trace under continuous and serial scheduling.
+    """Replay one trace under continuous (resident), round-trip, and
+    serial scheduling.
 
-    Returns ``{"continuous": LoadReport, "serial": LoadReport,
-    "speedup": float, "tokens_match": bool}`` — ``speedup`` is the
-    continuous-over-serial tokens/sec ratio the acceptance gate (>= 3x)
-    checks, ``tokens_match`` asserts the two schedules emitted
-    bit-identical tokens per request (scheduling must never change
-    results).
+    Returns ``{"continuous": LoadReport, "roundtrip": LoadReport,
+    "serial": LoadReport, "speedup": float, "resident_speedup": float,
+    "tokens_match": bool}`` — ``speedup`` is the continuous-over-serial
+    tokens/sec ratio the original acceptance gate (>= 3x) checks,
+    ``resident_speedup`` the continuous-over-roundtrip ratio the
+    resident-execution gate (>= 2x on a packed device backend) checks,
+    and ``tokens_match`` asserts all three schedules emitted
+    bit-identical tokens per request (scheduling and execution substrate
+    must never change results).
     """
     cont = run_load(engine, requests, mode="continuous", n_bits=n_bits,
                     decode_elems=decode_elems, max_slots=max_slots,
                     priority=priority, backend=backend, realtime=realtime)
+    rt = run_load(engine, requests, mode="roundtrip", n_bits=n_bits,
+                  decode_elems=decode_elems, max_slots=max_slots,
+                  priority=priority, backend=backend, realtime=realtime)
     ser = run_load(engine, requests, mode="serial", n_bits=n_bits,
                    decode_elems=decode_elems, backend=backend,
                    realtime=realtime)
     speedup = (cont.tokens_per_s / ser.tokens_per_s
                if ser.tokens_per_s else 0.0)
-    return {"continuous": cont, "serial": ser, "speedup": speedup,
-            "tokens_match": cont.bit_exact and ser.bit_exact}
+    resident_speedup = (cont.tokens_per_s / rt.tokens_per_s
+                        if rt.tokens_per_s else 0.0)
+    return {"continuous": cont, "roundtrip": rt, "serial": ser,
+            "speedup": speedup, "resident_speedup": resident_speedup,
+            "tokens_match": (cont.bit_exact and rt.bit_exact
+                             and ser.bit_exact)}

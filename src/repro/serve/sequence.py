@@ -110,6 +110,13 @@ class SequenceState:
         """MAC steps until the *current* token emits."""
         return len(self._stream[0]) - self._e
 
+    @property
+    def at_stream_start(self) -> bool:
+        """True when the next MAC step starts a fresh accumulator chain
+        (element 0 of a stream) — the resident path marks exactly these
+        lanes in its per-pass fresh mask."""
+        return self._e == 0
+
     # ----------------------------------------------------------- step ----
     def mac_operands(self) -> Tuple[int, int, int, int]:
         """``(a, b, s_i, c_i)`` for this sequence's next MAC step."""
@@ -124,7 +131,28 @@ class SequenceState:
         if self._e < len(self._stream[0]):
             return None
         # Stream drained: final s + c recombination emits the token.
-        tok = (self._s + self._c) & self._mask
+        return self._emit((self._s + self._c) & self._mask)
+
+    def advance_resident(self, drained: Optional[int] = None
+                         ) -> Optional[int]:
+        """Resident-path counterpart of :meth:`absorb`: the accumulator
+        lives in crossbar state, so nothing folds back per step — the
+        caller passes the device-drained 2n-bit lane value on the step
+        that drains the current stream (and ``None`` otherwise). Returns
+        the emitted token exactly like :meth:`absorb`."""
+        self._e += 1
+        if self._e < len(self._stream[0]):
+            return None
+        if drained is None:
+            raise ValueError(
+                f"rid={self.req.rid}: stream drained this step but no "
+                f"device lane value was supplied")
+        return self._emit(int(drained) & self._mask)
+
+    def _emit(self, tok: int) -> int:
+        """Shared token-emission bookkeeping (stream rollover, phase
+        transitions, re-seeding the next decode stream with the emitted
+        token)."""
         self.req.tokens.append(tok)
         self._prev = tok
         self._t += 1

@@ -1,0 +1,294 @@
+"""Device-resident carry-save execution: the compiled stage/recomb
+micro-programs, the cycle-model honesty gate (measured compiled cycles
+must undercut the analytic budgets they replaced), bit-parity of the
+resident chain against the per-pass host round-trip on every backend,
+the no-host-round-trip span contract, and the vectorized MAC
+marshalling fast path."""
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core.bits import from_bits, to_bits
+from repro.core.matvec import STAGING_CYCLES
+from repro.engine import Engine, get_engine
+from repro.engine.backends import resolve_backend, supports_resident
+
+pytestmark = pytest.mark.core
+
+BACKENDS = ["numpy", "numpy:pack=true", "jax:pack=true",
+            "pallas:pack=true"]
+
+
+@pytest.fixture()
+def tracer():
+    t = obs.get_tracer()
+    t.reset()
+    t.enable()
+    yield t
+    t.disable()
+    t.reset()
+
+
+# ------------------------------------------------- program truth ----
+@pytest.mark.parametrize("n", [4, 8])
+def test_stage_program_truth(n):
+    """stage: (s_hi, c_hi, lo) -> un = NOT((s_hi+c_hi) mod 2^n) and
+    s_lo = lo — the next pass's latch pre-loads, computed in-crossbar."""
+    eng = get_engine()
+    exe = eng.compile("stage", n)
+    rng = np.random.default_rng(0)
+    hi = 1 << n
+    s_hi = rng.integers(0, hi, 32)
+    c_hi = rng.integers(0, hi, 32)
+    lo = rng.integers(0, hi, 32)
+    out = exe.run({"s_hi": s_hi, "c_hi": c_hi, "lo": lo})
+    mask = hi - 1
+    want_un = [mask ^ ((int(s) + int(c)) & mask)
+               for s, c in zip(s_hi, c_hi)]
+    assert [int(u) for u in out["un"]] == want_un
+    assert [int(v) for v in out["s_lo"]] == [int(v) for v in lo]
+
+
+@pytest.mark.parametrize("n", [4, 8])
+def test_recomb_program_truth(n):
+    """recomb: the drained token is lo + (((s_hi+c_hi) mod 2^n) << n)
+    = (s + c) mod 2^(2n), one in-crossbar ripple."""
+    eng = get_engine()
+    exe = eng.compile("recomb", n)
+    rng = np.random.default_rng(1)
+    hi = 1 << n
+    s_hi = rng.integers(0, hi, 32)
+    c_hi = rng.integers(0, hi, 32)
+    lo = rng.integers(0, hi, 32)
+    out = exe.run({"s_hi": s_hi, "c_hi": c_hi, "lo": lo})
+    want = [int(l) + (((int(s) + int(c)) & (hi - 1)) << n)
+            for l, s, c in zip(lo, s_hi, c_hi)]
+    assert [int(v) for v in out["out"]] == want
+
+
+# --------------------------------------------- cycle-model honesty ----
+@pytest.mark.parametrize("n", [4, 8, 16])
+def test_measured_cycles_undercut_analytic_budgets(n):
+    """The compiled micro-programs must stay strictly cheaper than the
+    analytic host-assisted budgets they replaced — the cycle accounting
+    now reports measured compiled cycles, so a scheduler regression that
+    pushes either program past its old budget fails here."""
+    eng = get_engine()
+    assert eng.staging_cycles(n) < STAGING_CYCLES(n)       # was 8n + 2
+    assert eng.recomb_cycles(n) < 5 * (2 * n)              # was 10n
+    assert eng.recomb_cycles(2 * n) < 5 * (2 * (2 * n))
+
+
+def test_resident_chain_cycles_accounting():
+    """ResidentExecutable.chain_cycles == the sequential inner-product
+    charge: E MAC passes + (E-1) compiled restages + one final
+    recombination. inner_product reports identical cycles on the
+    resident and round-trip paths (same schedule, different substrate)."""
+    eng = get_engine()
+    n, E = 8, 5
+    rex = eng.resident(n, rows=4)
+    want = (E * rex.mac_cycles + (E - 1) * rex.stage_cycles
+            + rex.recomb_cycles)
+    assert rex.chain_cycles(E) == want
+    assert rex.stage_cycles == eng.staging_cycles(n)
+    assert rex.recomb_cycles == eng.recomb_cycles(n)
+    rng = np.random.default_rng(2)
+    a = rng.integers(0, 40, (4, E))
+    x = rng.integers(0, 40, (4, E))
+    _, cyc_res = eng.inner_product(a, x, n, k=1, resident=True)
+    _, cyc_rt = eng.inner_product(a, x, n, k=1, resident=False)
+    assert cyc_res == cyc_rt == want
+
+
+# ------------------------------------------------------ bit parity ----
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_inner_product_resident_matches_roundtrip(backend):
+    eng = Engine(backend)
+    assert supports_resident(resolve_backend(backend))
+    rng = np.random.default_rng(3)
+    n, rows, E = 8, 6, 7
+    a = rng.integers(0, 50, (rows, E))
+    x = rng.integers(0, 50, (rows, E))
+    res, cyc_res = eng.inner_product(a, x, n, k=1, resident=True)
+    rt, cyc_rt = eng.inner_product(a, x, n, k=1, resident=False)
+    want = [int(sum(int(ai) * int(xi) for ai, xi in zip(ar, xr)))
+            for ar, xr in zip(a, x)]
+    assert [int(v) for v in res] == want
+    assert [int(v) for v in rt] == want
+    assert cyc_res == cyc_rt
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_matvec_resident_matches_roundtrip(backend):
+    eng = Engine(backend)
+    rng = np.random.default_rng(4)
+    A = rng.integers(0, 50, (5, 4))
+    x = rng.integers(0, 50, 4)
+    res, _ = eng.matvec(A, x, 8, k=1, resident=True)
+    rt, _ = eng.matvec(A, x, 8, k=1, resident=False)
+    want = A.astype(object) @ x.astype(object)
+    assert [int(v) for v in res] == [int(w) for w in want]
+    assert [int(v) for v in rt] == [int(w) for w in want]
+
+
+def test_resident_fresh_mask_restarts_lanes_mid_chain():
+    """A lane marked fresh restarts its accumulator while its neighbors
+    keep accumulating — the serve batcher's eviction/backfill substrate.
+    Drains are non-destructive reads (state survives the next step)."""
+    eng = Engine("numpy:pack=true")
+    n, rows = 8, 4
+    rex = eng.resident(n, rows=rows)
+    rng = np.random.default_rng(5)
+    shadow = [0] * rows
+    mask = (1 << (2 * n)) - 1
+    for step in range(6):
+        a = rng.integers(0, 40, rows)
+        b = rng.integers(0, 40, rows)
+        fresh = np.zeros(rows, dtype=bool)
+        if step:
+            fresh[step % rows] = True
+        for r in range(rows):
+            if fresh[r] or step == 0:
+                shadow[r] = 0
+            shadow[r] = (shadow[r] + int(a[r]) * int(b[r])) & mask
+        rex.step(a, b, fresh=None if step == 0 else fresh)
+        got = [int(v) for v in rex.drain()]
+        assert got == shadow, f"lane state diverged at step {step}"
+
+
+def test_resident_rejects_unsupported_backend():
+    eng = Engine("jax")             # unpacked jax: no resident chain
+    assert not supports_resident(resolve_backend("jax"))
+    with pytest.raises(ValueError, match="resident"):
+        eng.resident(8, rows=4)
+    # and inner_product falls back to round-trip instead of raising
+    a = np.arange(1, 9).reshape(2, 4)
+    res, _ = eng.inner_product(a, a, 8)
+    assert [int(v) for v in res] == [
+        int(sum(int(x) * int(x) for x in row)) for row in a]
+
+
+# ----------------------------------------------------- span contract ----
+@pytest.mark.parametrize("backend", ["numpy:pack=true", "jax:pack=true"])
+def test_resident_chain_never_unpacks_between_passes(tracer, backend):
+    """The point of the resident path: packed state stays on-device for
+    the whole chain. Spans must show zero host unpacks / unmarshals
+    between passes — exactly one backend.unpack, at the drain."""
+    eng = Engine(backend)
+    rex = eng.resident(8, rows=4)           # compile outside the window
+    tracer.reset()
+    rng = np.random.default_rng(6)
+    E = 5
+    for _ in range(E):
+        rex.step(rng.integers(0, 40, 4), rng.integers(0, 40, 4))
+    rex.drain()
+    names = [e["name"] for e in tracer.trace_dict()["traceEvents"]
+             if e.get("ph") == "X"]
+    assert names.count("backend.unpack") == 1, \
+        f"host unpack mid-chain: {names}"
+    assert "exec.marshal" not in names and "exec.unmarshal" not in names
+    assert names.count("exec.step") == E - 1
+    assert names.count("exec.load") == 1
+    assert names.count("exec.drain") == 1
+
+
+# -------------------------------------------------- serve substrate ----
+@pytest.mark.system
+def test_batcher_resident_matches_roundtrip_under_eviction():
+    """Same staggered eviction/backfill trace, resident vs forced
+    round-trip batcher: bit-identical tokens (and both match the
+    plain-int reference)."""
+    from repro.serve import ContinuousBatcher, Request, reference_tokens
+
+    def reqs():
+        return [Request(rid=i, arrival=0.0, prompt=p, max_new_tokens=t,
+                        seed=0)
+                for i, (p, t) in enumerate([((3, 5), 4), ((7, 2, 11), 1),
+                                            ((5,), 2), ((8, 8), 1)])]
+
+    eng = Engine("numpy:pack=true")
+    runs = {}
+    for mode in (True, False):
+        rs = reqs()
+        b = ContinuousBatcher(eng, n_bits=8, max_slots=2, decode_elems=2,
+                              resident=mode)
+        assert b.resident is mode
+        for r in rs:
+            b.queue.submit(r, 0.0)
+        b.warmup()
+        b.run_until_idle()
+        runs[mode] = rs
+    for res, rt in zip(runs[True], runs[False]):
+        assert res.tokens == rt.tokens == reference_tokens(res, 8, 2)
+
+
+# ------------------------------------------------ marshal fast path ----
+def test_mac_inputs_vectorized_matches_exact_planes():
+    """The int64 fast path (n <= 30) must emit exactly the planes the
+    object-int definition specifies, including the complemented
+    u-stream and carry-low planes."""
+    eng = get_engine()
+    n = 8
+    rng = np.random.default_rng(7)
+    rows = 16
+    a = rng.integers(0, 1 << n, rows)
+    b = rng.integers(0, 1 << n, rows)
+    s = rng.integers(0, 1 << (2 * n - 1), rows)
+    c = rng.integers(0, 1 << (2 * n - 1), rows)
+    got = eng.mac_inputs(n, a, b, s, c)
+    m = (1 << n) - 1
+    u = np.array([(int(si) >> n) + (int(ci) >> n)
+                  for si, ci in zip(s, c)], dtype=object)
+    assert np.array_equal(got["a"], to_bits(a.astype(object), n))
+    assert np.array_equal(got["b"], to_bits(b.astype(object), n))
+    assert np.array_equal(got["un"], 1 - to_bits(u, n))
+    assert np.array_equal(
+        got["s_lo"], to_bits([int(v) & m for v in s], n))
+    assert np.array_equal(
+        got["c_lo"], to_bits([int(v) & m for v in c], n))
+    assert np.array_equal(got["c_lo_n"], 1 - got["c_lo"])
+    for v in got.values():
+        assert v.dtype == np.uint8 or v.max() <= 1
+
+
+def test_mac_inputs_wide_object_path_matches_fast_path_semantics():
+    """n > 30 falls back to exact object ints; the round trip through
+    mac_inputs -> compiled mac -> mac_accumulate stays exact at both
+    widths."""
+    eng = get_engine()
+    for n in (8, 32):
+        rng = np.random.default_rng(n)
+        hi = 1 << min(16, n)
+        a = np.array([int(v) for v in rng.integers(0, hi, 4)],
+                     dtype=object)
+        b = np.array([int(v) for v in rng.integers(0, hi, 4)],
+                     dtype=object)
+        z = np.zeros(4, dtype=object)
+        out = eng.compile("mac", n).run(eng.mac_inputs(n, a, b, z, z))
+        s, c = eng.mac_accumulate(n, out)
+        assert [int(si) + int(ci) for si, ci in zip(s, c)] \
+            == [int(x) * int(y) for x, y in zip(a, b)]
+
+
+def test_mac_inputs_overflow_raises_on_both_paths():
+    eng = get_engine()
+    bad_s = np.array([1 << 15], dtype=object)   # u-stream > 2^8
+    bad_c = np.array([1 << 15], dtype=object)
+    with pytest.raises(OverflowError):
+        eng.mac_inputs(8, [1], [1], bad_s, bad_c)
+    with pytest.raises(OverflowError):
+        eng.mac_inputs(31, [1], [1], [1 << 61], [1 << 61])
+
+
+def test_mac_accumulate_vectorized_matches_object_path():
+    rng = np.random.default_rng(9)
+    n, rows = 8, 12
+    out = {k: rng.integers(0, 2, (rows, n)).astype(np.uint8)
+           for k in ("lo", "s_hi", "c_hi")}
+    s, c = Engine._mac_accumulate(n, out)
+    lo, s_hi, c_hi = (from_bits(out["lo"]), from_bits(out["s_hi"]),
+                      from_bits(out["c_hi"]))
+    assert [int(v) for v in s] == [
+        int(l) + (int(sh) << n) for l, sh in zip(lo, s_hi)]
+    assert [int(v) for v in c] == [int(ch) << n for ch in c_hi]
+    assert s.dtype == object and c.dtype == object

@@ -131,9 +131,11 @@ def test_eviction_backfill_bit_parity(backend):
 
 # -------------------------------------------------------- dynamic K ----
 def test_dynamic_k_tracks_live_batch_with_zero_recompiles():
+    # Dynamic K is a round-trip-substrate property: the resident path
+    # pins pass width to max_slots (an idle lane costs one packed bit).
     eng = Engine()
     b = ContinuousBatcher(eng, n_bits=N_BITS, max_slots=8,
-                          decode_elems=2)
+                          decode_elems=2, resident=False)
     assert b.ladder == (1, 2, 4, 8)
     for i in range(8):
         b.queue.submit(_req(i, 1 + i % 3, prompt=(2 + i,)), 0.0)
@@ -155,7 +157,8 @@ def test_dynamic_k_tracks_live_batch_with_zero_recompiles():
 
 def test_pinned_ladder_caps_slots():
     eng = Engine()
-    b = ContinuousBatcher(eng, n_bits=N_BITS, ladder=(4,), max_slots=4)
+    b = ContinuousBatcher(eng, n_bits=N_BITS, ladder=(4,), max_slots=4,
+                          resident=False)
     assert b.ladder == (4,)
     for i in range(6):
         b.queue.submit(_req(i, 1), 0.0)
