@@ -10,9 +10,9 @@ its rows::
 
   PYTHONPATH=src python -m benchmarks.run [--section table1|table2|table3|
                                            fa|opt|sim|throughput|resident|
-                                           block_pim|serve_load|obs|
+                                           block_pim|serve_load|device|obs|
                                            roofline|all|sec1,sec2,...]
-                                          [--json BENCH_pr8.json|off]
+                                          [--json BENCH_pr9.json|off]
                                           [--trace OUT.json]
                                           [--metrics OUT.json]
 """
@@ -27,7 +27,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--section", default="all")
     ap.add_argument("--dryrun-json", default="dryrun_results.json")
-    ap.add_argument("--json", default="BENCH_pr8.json",
+    ap.add_argument("--json", default="BENCH_pr9.json",
                     help="machine-readable output path ('off' disables)")
     ap.add_argument("--trace", default=None, metavar="OUT.json",
                     help="enable span tracing and write a Chrome "
@@ -55,6 +55,7 @@ def main() -> None:
         "pim_plan": tables.pim_plan_sweep,
         "block_pim": tables.block_pim_plan,
         "serve_load": tables.serve_load,
+        "device": tables.device_hierarchy,
         "energy": tables.energy_table,
         "obs": tables.obs_metrics,
         "roofline": lambda: roofline_rows(args.dryrun_json),

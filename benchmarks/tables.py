@@ -484,6 +484,67 @@ def block_pim_plan(archs=("gemma2-9b", "deepseek-moe-16b")) -> List[Row]:
     return rows
 
 
+def device_hierarchy(arch: str = "gemma2-9b",
+                     shape: str = "2x2x4x4",
+                     target_tokens_per_sec: float = 1e5) -> List[Row]:
+    """Device-hierarchy cost rollup (repro.device): the full-block plan
+    placed onto a PIM chip, its modeled command trace charged through
+    the hierarchical cost model. Emits a degeneracy row (a 1x1x1x1
+    device must reproduce the flat plan's cycles/token exactly), one
+    utilization row per hierarchy level of ``shape``, a totals row
+    (end-to-end latency / energy / tokens-per-sec with hop + host-link
+    terms the flat model cannot see), and the fleet-sizing answer:
+    devices needed to sustain ``target_tokens_per_sec`` aggregate."""
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.device import CoordAllocator, DeviceConfig, block_trace, charge
+    from repro.engine import Engine
+    from repro.pim import plan_block
+    rows: List[Row] = []
+    eng = Engine()
+    cfg = dataclasses.replace(get_config(arch), pim_linear_mode="pim",
+                              pim_block_mode="full")
+
+    # Degeneracy: one crossbar, one group -> zero hops, critical path ==
+    # the flat plan's cycles/token (same invariant tests/test_device.py
+    # property-tests).
+    one = DeviceConfig.parse("1x1x1x1", crossbar=eng.crossbar)
+    head = plan_block(cfg, eng, scopes=("head",))
+    rep1 = charge(block_trace(head, one))
+    rows.append((f"device/degenerate/{arch}/1x1x1x1", 0.0,
+                 f"crit_cycles={rep1.crit_cycles};"
+                 f"flat_cycles={head.cycles_per_token};"
+                 f"exact_match={rep1.crit_cycles == head.cycles_per_token};"
+                 f"hop_ns={rep1.hop_ns:.0f}"))
+
+    # Full-block plan placed onto the hierarchy (scope-aligned banks).
+    dev = DeviceConfig.parse(shape, crossbar=eng.crossbar)
+    t0 = time.perf_counter()
+    plan = plan_block(cfg, eng, placer=CoordAllocator(dev).place)
+    rep = charge(block_trace(plan, dev))
+    us = (time.perf_counter() - t0) * 1e6
+    for lv in rep.levels:
+        rows.append((f"device/level/{arch}/{shape}/{lv['level']}", 0.0,
+                     f"units={lv['units']};used={lv['used']};"
+                     f"busy_cycles={lv['busy_cycles']};"
+                     f"utilization={lv['utilization']:.3f}"))
+    rows.append((f"device/total/{arch}/{shape}", us,
+                 f"crit_cycles={rep.crit_cycles};"
+                 f"compute_us={rep.compute_us:.1f};"
+                 f"hop_ns={rep.hop_ns:.0f};"
+                 f"transfer_us={rep.transfer_us:.2f};"
+                 f"latency_us={rep.latency_us:.1f};"
+                 f"energy_uJ={rep.energy_uj:.1f};"
+                 f"row_energy_uJ={rep.row_energy_uj:.1f};"
+                 f"tokens_per_s={rep.tokens_per_sec:.1f}"))
+    rows.append((f"device/fleet/{arch}/{shape}", 0.0,
+                 f"target_tokens_per_s={target_tokens_per_sec:.0f};"
+                 f"tokens_per_s_per_device={rep.tokens_per_sec:.1f};"
+                 f"n_devices={rep.capacity(target_tokens_per_sec)}"))
+    return rows
+
+
 def obs_metrics(n: int = 16) -> List[Row]:
     """Observability section: tracer overhead (the disabled hot path
     must be ~free), end-to-end ``Executable.run`` wall time with tracing

@@ -1,0 +1,89 @@
+"""Fail CI on dead relative links in README.md and docs/*.md.
+
+Checks every markdown link whose target is a relative path: the file
+must exist (relative to the markdown file containing the link), and a
+``#fragment`` pointing into a markdown file must match one of that
+file's headings under GitHub's anchor slugging. External links
+(http/https/mailto) are out of scope — CI must not depend on the
+network.
+
+  python scripts/check_links.py            # repo root inferred
+  python scripts/check_links.py README.md docs/architecture.md
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# [text](target) — ignore images' leading ! by just matching the pair;
+# a dead image path should fail the same way.
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "ftp://")
+
+
+def slugify(heading: str) -> str:
+    """GitHub's heading -> anchor id (lowercase, punctuation dropped,
+    spaces to hyphens; inline code backticks contribute their text)."""
+    text = heading.strip().lower()
+    text = re.sub(r"[^\w\s-]", "", text)
+    return re.sub(r"\s+", "-", text).strip("-")
+
+
+def anchors_of(md_path: Path) -> set:
+    seen: set = set()
+    for line in md_path.read_text(encoding="utf-8").splitlines():
+        m = HEADING_RE.match(line)
+        if m:
+            slug = slugify(m.group(1))
+            n, base = 0, slug
+            while slug in seen:          # duplicate headings get -1, -2
+                n += 1
+                slug = f"{base}-{n}"
+            seen.add(slug)
+    return seen
+
+
+def check_file(md_path: Path) -> list:
+    errors = []
+    text = md_path.read_text(encoding="utf-8")
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(SKIP_PREFIXES) or target.startswith("<"):
+            continue
+        path_part, _, fragment = target.partition("#")
+        if not path_part:                # same-file #anchor
+            dest = md_path
+        else:
+            dest = (md_path.parent / path_part).resolve()
+            if not dest.exists():
+                errors.append(f"{md_path}: dead link -> {target}")
+                continue
+        if fragment and dest.suffix == ".md":
+            if fragment not in anchors_of(dest):
+                errors.append(f"{md_path}: dead anchor -> {target}")
+    return errors
+
+
+def main(argv) -> int:
+    root = Path(__file__).resolve().parent.parent
+    files = ([Path(a) for a in argv[1:]] if len(argv) > 1
+             else [root / "README.md", *sorted((root / "docs").glob("*.md"))])
+    errors = []
+    checked = 0
+    for f in files:
+        if not f.exists():
+            errors.append(f"{f}: file not found")
+            continue
+        checked += 1
+        errors.extend(check_file(f))
+    for e in errors:
+        print(f"DEAD LINK: {e}", file=sys.stderr)
+    print(f"link check: {checked} files, "
+          f"{'FAILED, ' + str(len(errors)) + ' dead' if errors else 'OK'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

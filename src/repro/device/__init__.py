@@ -1,0 +1,29 @@
+"""repro.device: the PIM device-hierarchy simulator.
+
+Layers a full chip — crossbars x banks x bank groups x channels
+(:class:`DeviceConfig`) — above the single-crossbar
+:class:`~repro.engine.Engine`:
+
+* :class:`Coord` / :class:`CoordAllocator` place the block planner's
+  co-scheduled groups onto physical crossbar coordinates
+  (:func:`repro.pim.planner.plan_block`'s ``placer`` hook);
+* :class:`CommandTrace` / :class:`TraceRecorder` / :func:`block_trace`
+  emit, serialize, and bit-exactly replay the host command stream
+  (`docs/trace-format.md`);
+* :func:`charge` / :class:`DeviceCostReport` roll the trace up into
+  per-level utilization/cost rows, end-to-end latency, and the
+  ``capacity(tokens_per_sec) -> n_devices`` fleet-sizing answer.
+
+See `docs/architecture.md` for where this layer sits in the stack and
+``examples/device_sim.py`` for the end-to-end walkthrough.
+"""
+from .config import (Coord, CoordAllocator, DeviceCapacityError,
+                     DeviceConfig)
+from .cost import DeviceCostReport, charge
+from .trace import CommandTrace, Record, TraceRecorder, block_trace
+
+__all__ = [
+    "Coord", "CoordAllocator", "DeviceCapacityError", "DeviceConfig",
+    "CommandTrace", "Record", "TraceRecorder", "block_trace",
+    "DeviceCostReport", "charge",
+]

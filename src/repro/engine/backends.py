@@ -337,6 +337,7 @@ class NumpyBackend:
     name: str = "numpy"
 
     def run_state(self, packed: PackedProgram, state: np.ndarray) -> np.ndarray:
+        """Interpret the packed tables over ``state`` (rows, C) {0,1}."""
         if self.pack:
             return self._run_packed(packed, state)
         with obs.span("backend.kernel", backend=self.name,
@@ -418,6 +419,7 @@ class NumpyBackend:
     def resident_chain(self, mac: PackedProgram, stage: PackedProgram,
                        recomb: PackedProgram, idx: ResidentIndex,
                        rows: int) -> _NumpyChain:
+        """Build a resident MAC chain over this backend's interpreter."""
         return _NumpyChain(self, mac, stage, recomb, idx, rows)
 
 
@@ -443,6 +445,7 @@ class JaxBackend:
     name: str = "jax"
 
     def run_state(self, packed: PackedProgram, state: np.ndarray) -> np.ndarray:
+        """Run the jitted scan over ``state`` (rows, C) {0,1}."""
         import jax.numpy as jnp
 
         from repro.kernels.ref import (crossbar_run_ref,
@@ -467,6 +470,7 @@ class JaxBackend:
     def resident_chain(self, mac: PackedProgram, stage: PackedProgram,
                        recomb: PackedProgram, idx: ResidentIndex,
                        rows: int) -> _JaxChain:
+        """Build a packed device-resident MAC chain (needs pack=true)."""
         if not self.pack:
             raise ValueError("resident execution on the jax backend "
                              "requires pack=true (spec 'jax:pack=true')")
@@ -516,6 +520,7 @@ class PallasBackend:
     name: str = "pallas"
 
     def run_state(self, packed: PackedProgram, state: np.ndarray) -> np.ndarray:
+        """Run the Pallas kernel over ``state`` (rows, C) {0,1}."""
         import jax.numpy as jnp
 
         from repro.kernels.crossbar_step import (crossbar_run_pallas,
@@ -545,6 +550,7 @@ class PallasBackend:
     def resident_chain(self, mac: PackedProgram, stage: PackedProgram,
                        recomb: PackedProgram, idx: ResidentIndex,
                        rows: int) -> _PallasChain:
+        """Build a packed device-resident MAC chain (needs pack=true)."""
         if not self.pack:
             raise ValueError("resident execution on the pallas backend "
                              "requires pack=true (spec 'pallas:pack=true')")
@@ -578,6 +584,7 @@ def register_backend(name: str, factory: Callable[..., Backend]) -> None:
 
 
 def backend_names() -> list:
+    """Registered backend names, sorted."""
     return sorted(_REGISTRY)
 
 

@@ -92,6 +92,8 @@ class GroupSpec:
 
     @classmethod
     def of(cls, item: Union["GroupSpec", Tuple, Dict, str]) -> "GroupSpec":
+        """Coerce a group member — GroupSpec, ``(op, n[, copies])``
+        tuple, or kwargs dict — into a :class:`GroupSpec`."""
         if isinstance(item, cls):
             return item
         if isinstance(item, str):

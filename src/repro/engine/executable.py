@@ -67,9 +67,11 @@ class ExecCost:
 
     @property
     def cycles_per_program(self) -> float:
+        """Pass cycles amortized over the co-scheduled programs."""
         return self.cycles / self.programs
 
     def as_dict(self) -> Dict:
+        """Plain-dict form (benchmark/JSON reporting)."""
         d = dict(self.__dict__)
         d["cycles_per_program"] = self.cycles_per_program
         return d
@@ -89,6 +91,7 @@ class Executable:
     # ---------------------------------------------------------- views ----
     @property
     def spec(self) -> "OpSpec":
+        """The :class:`~repro.compiler.spec.OpSpec` identity compiled."""
         return self.entry.key
 
     @property
@@ -103,10 +106,12 @@ class Executable:
 
     @property
     def n_cycles(self) -> int:
+        """Modeled crossbar cycles of one pass."""
         return self.entry.program.n_cycles
 
     @property
     def input_widths(self) -> Dict[str, int]:
+        """Bit width of every program input, by name."""
         return {k: len(v) for k, v in self.program.input_map.items()}
 
     def __repr__(self) -> str:
@@ -292,6 +297,7 @@ class GroupedExecutable:
 
     @property
     def packed(self) -> "PackedProgram":
+        """The fused program's dense executor tables."""
         return self.inner.packed
 
     @property
@@ -302,6 +308,7 @@ class GroupedExecutable:
 
     @property
     def backend(self) -> Backend:
+        """The backend the fused pass executes on."""
         return self.inner.backend
 
     def __repr__(self) -> str:
@@ -338,7 +345,8 @@ class GroupedExecutable:
 
     # ------------------------------------------------------------ run ----
     def run(self, batches: Sequence[Mapping[str, Union[np.ndarray, list]]],
-            *, backend: Union[None, str, Backend] = None
+            *, backend: Union[None, str, Backend] = None,
+            recorder: Optional[object] = None
             ) -> List[Dict[str, np.ndarray]]:
         """Execute K operand sets in one crossbar pass.
 
@@ -348,6 +356,13 @@ class GroupedExecutable:
         rows are the crossbar's SIMD axis, programs are the column
         axis). Returns the K output dicts in order, bit-identical to K
         independent :meth:`Executable.run` calls of the member ops.
+
+        ``recorder`` is the device-hierarchy trace hook: any object with
+        ``record_pass(gex, batches, results)`` (see
+        :class:`repro.device.TraceRecorder`) gets the pass appended to
+        its command trace — operands and results included, so the trace
+        replays bit-exact. The engine layer stays device-agnostic; it
+        only calls back.
         """
         if len(batches) != self.k:
             raise ValueError(f"expected {self.k} operand sets, "
@@ -386,7 +401,9 @@ class GroupedExecutable:
                             val = from_bits(val)
                         grp[name] = val
                     results.append(grp)
-                return results
+            if recorder is not None:
+                recorder.record_pass(self, batches, results)
+            return results
 
 
 class ResidentExecutable:
@@ -475,14 +492,17 @@ class ResidentExecutable:
     # ---------------------------------------------------------- views ----
     @property
     def mac_cycles(self) -> int:
+        """Cycles of one compiled MAC pass."""
         return self.mac_entry.program.n_cycles
 
     @property
     def stage_cycles(self) -> int:
+        """Cycles of the compiled inter-pass restage program."""
         return self.stage_entry.program.n_cycles
 
     @property
     def recomb_cycles(self) -> int:
+        """Cycles of the compiled final carry-save recombination."""
         return self.recomb_entry.program.n_cycles
 
     @property

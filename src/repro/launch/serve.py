@@ -87,7 +87,10 @@ def _profile_pass(engine, n_bits: int) -> None:
 def _export_waterfalls(engine, plan, n_bits: int) -> None:
     """Merge modeled-cycle waterfall tracks into the trace: one process
     row per co-scheduled plan group (fused program occupancy +
-    switching) and one for the LM-head MAC group."""
+    switching) and one for the LM-head MAC group. Groups placed on a
+    device hierarchy (``--device-config``) carry their coordinate as a
+    counter-track prefix, so per-channel activity reads directly off
+    the trace."""
     pid = 2
     seen = set()
     groups = list(plan.groups) if plan is not None else []
@@ -99,7 +102,8 @@ def _export_waterfalls(engine, plan, n_bits: int) -> None:
         obs.add_events(obs.waterfall_events(
             gex.program, packed=gex.packed,
             name=f"{g.scope}: {gex.program.name}", pid=pid,
-            cycle_ns=engine.crossbar.cycle_ns))
+            cycle_ns=engine.crossbar.cycle_ns,
+            track=str(g.coord) if g.coord is not None else None))
         pid += 1
     k = engine.effective_coschedule_k("mac", n_bits)
     exe = (engine.compile_batch("mac", n_bits, k) if k >= 2
@@ -135,11 +139,21 @@ def _run_traffic(args) -> None:
         engine.backend = resolve_backend(args.pim_backend)
     n = args.pim_bits
     elems = args.traffic_elems or DECODE_ELEMS
+    device = None
+    if args.device_config is not None:
+        from repro.device import DeviceConfig
+        device = DeviceConfig.parse(args.device_config,
+                                    crossbar=engine.crossbar)
+        log.info("device hierarchy: %s (%d crossbars)", device,
+                 device.n_crossbars)
     # --pim-k (deprecated) pins the batch width; otherwise the slot
-    # budget comes from the crossbar column budget via the planner.
+    # budget comes from the crossbar column budget via the planner
+    # (scaled by the device crossbar count under --device-config).
     max_slots = args.pim_k if args.pim_k is not None else args.traffic_slots
-    slots = plan_serve_slots(engine, n, max_slots=max_slots)
+    slots = plan_serve_slots(engine, n, max_slots=max_slots, device=device)
     log.info("%s", slots.summary())
+    if max_slots is None and device is not None:
+        max_slots = slots.max_slots    # device-scaled budget -> scheduler
 
     cfg = TrafficConfig(n_requests=args.traffic, rate=args.traffic_rate,
                         n_bits=n, seed=args.traffic_seed)
@@ -239,6 +253,13 @@ def main() -> None:
                          "words — the fast path for wide decode batches) "
                          "or 'pallas:interpret=false' on real TPU; "
                          "default: the engine's numpy reference")
+    ap.add_argument("--device-config", default=None, metavar="CxGxBxX",
+                    help="model a PIM device hierarchy (repro.device): "
+                         "channels x bank-groups x banks x crossbars, "
+                         "e.g. '2x2x4x4'. Plan groups are placed onto "
+                         "coordinates, the slot budget scales with the "
+                         "crossbar count, and the driver logs per-level "
+                         "utilization/cost plus fleet sizing")
     ap.add_argument("--traffic", type=int, default=None, metavar="N",
                     help="continuous-batching load mode: serve N "
                          "synthetic requests (seeded Poisson arrivals) "
@@ -323,9 +344,18 @@ def main() -> None:
     # here; every decode step below reuses them through the shared
     # engine cache (the recompile check at the end enforces it).
     plan = None
+    device = None
     if pim:
         from repro.pim import plan_block
-        plan = plan_block(cfg, engine)
+        placer = None
+        if args.device_config is not None:
+            from repro.device import CoordAllocator, DeviceConfig
+            device = DeviceConfig.parse(args.device_config,
+                                        crossbar=engine.crossbar)
+            placer = CoordAllocator(device).place
+            log.info("device hierarchy: %s (%d crossbars, %d banks)",
+                     device, device.n_crossbars, device.n_banks)
+        plan = plan_block(cfg, engine, placer=placer)
 
     rng = np.random.default_rng(0)
     prompts = jnp.asarray(rng.integers(3, cfg.vocab_size,
@@ -439,6 +469,14 @@ def main() -> None:
                      f"{plan.cycles_per_token:,}", us,
                      engine.crossbar.cycle_ns, args.gen - 1)
             obs.gauge("serve.cycles_per_token").set(plan.cycles_per_token)
+        if device is not None and plan.groups:
+            from repro.device import block_trace, charge
+            rep = charge(block_trace(plan, device))
+            for line in rep.summary().splitlines():
+                log.info("%s", line)
+            obs.gauge("serve.device.latency_us").set(rep.latency_us)
+            obs.gauge("serve.device.tokens_per_sec").set(
+                rep.tokens_per_sec)
 
     if args.trace:
         if pim:

@@ -141,7 +141,8 @@ def switching_activity(packed: PackedProgram, rows: int = 64,
 # -------------------------------------------------------------- export ----
 def waterfall_events(prog: Program, *, packed: Optional[PackedProgram]
                      = None, name: Optional[str] = None, pid: int = 2,
-                     cycle_ns: float = CYCLE_NS_DEFAULT) -> List[dict]:
+                     cycle_ns: float = CYCLE_NS_DEFAULT,
+                     track: Optional[str] = None) -> List[dict]:
     """Chrome trace events for one program's waterfall.
 
     Emits a ``process_name`` metadata event plus per-cycle counter
@@ -151,21 +152,24 @@ def waterfall_events(prog: Program, *, packed: Optional[PackedProgram]
     given — a ``switching`` track with bit flips per row. Feed the
     result to ``Tracer.add_events``; use a distinct ``pid`` (>= 2) per
     program so each gets its own process row next to the wall-time
-    spans (pid 1).
+    spans (pid 1). ``track`` prefixes the counter names (e.g.
+    ``"ch0.bg0.b0.x0"`` from a device placement) so several placed
+    copies of the same program stay distinguishable in one process row.
     """
     label = name or prog.name
+    prefix = f"{track}/" if track else ""
     occ = cycle_occupancy(prog)
     sw = switching_profile(packed) if packed is not None else None
     events: List[dict] = [{
         "name": "process_name", "ph": "M", "pid": pid, "tid": 0,
-        "args": {"name": f"waterfall: {label} (modeled cycles)"},
+        "args": {"name": f"waterfall: {prefix}{label} (modeled cycles)"},
     }]
     T = prog.n_cycles
     for t in range(T + 1):        # one trailing sample closes the track
         ts = t * cycle_ns / 1e3   # trace ts is microseconds
         done = t == T
         events.append({
-            "name": "occupancy", "ph": "C", "ts": ts, "pid": pid,
+            "name": f"{prefix}occupancy", "ph": "C", "ts": ts, "pid": pid,
             "args": {
                 "ops": 0 if done else occ["ops"][t],
                 "partitions_busy": 0 if done else occ["partitions_busy"][t],
@@ -174,7 +178,7 @@ def waterfall_events(prog: Program, *, packed: Optional[PackedProgram]
         })
         if sw is not None:
             events.append({
-                "name": "switching", "ph": "C", "ts": ts, "pid": pid,
+                "name": f"{prefix}switching", "ph": "C", "ts": ts, "pid": pid,
                 "args": {"bit_flips_per_row":
                          0.0 if done else round(float(sw[t]), 3)},
             })

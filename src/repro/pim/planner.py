@@ -192,6 +192,10 @@ class LinearGroup:
     # crossbar-waterfall tracks; excluded from repr to keep summaries
     # readable.
     executable: Optional[object] = field(default=None, repr=False)
+    # Physical placement in a device hierarchy: the crossbar coordinate
+    # a placer assigned (:class:`repro.device.Coord`), or None for the
+    # flat single-crossbar-per-group model.
+    coord: Optional[object] = None
 
     @property
     def macs_per_pass(self) -> int:
@@ -300,7 +304,8 @@ class BlockPlan:
 
 
 def plan_block(cfg, engine=None,
-               scopes: Optional[Tuple[str, ...]] = None) -> BlockPlan:
+               scopes: Optional[Tuple[str, ...]] = None,
+               placer=None) -> BlockPlan:
     """Lower a model's block linears onto co-scheduled crossbar groups.
 
     ``scopes`` defaults to what the config's PIM flags enable
@@ -311,6 +316,14 @@ def plan_block(cfg, engine=None,
     once through :meth:`Engine.compile_group` — decode steps reuse the
     memoized weight-stationary layout, so serving pays compilation
     exactly once per (scope, width).
+
+    ``placer`` maps each group onto a physical crossbar of a device
+    hierarchy: any ``placer(label, scope) -> coordinate`` callable
+    (:meth:`repro.device.CoordAllocator.place` is the stock one). The
+    returned coordinate lands in :attr:`LinearGroup.coord`; without a
+    placer groups keep the flat parallel-crossbars model
+    (``coord=None``). The planner itself stays device-agnostic — it
+    only calls back.
     """
     from repro.engine import GroupSpec, get_engine
     eng = engine if engine is not None else get_engine()
@@ -337,13 +350,16 @@ def plan_block(cfg, engine=None,
                 gex = eng.compile_group(
                     [GroupSpec("mac", n, copies=c, label=l.name)
                      for l, c in zip(part, chains)])
+                label = ",".join(l.name for l in part)
                 plan.groups.append(LinearGroup(
                     scope=scope, linears=part, chains=chains,
                     pass_cycles=gex.n_cycles,
                     cols_used=sum(p.n_cols for p in gex.placements),
                     n_bits=n, staging_cycles=eng.staging_cycles(n),
                     recomb_cycles=eng.recomb_cycles(2 * n),
-                    executable=gex))
+                    executable=gex,
+                    coord=(placer(label, scope) if placer is not None
+                           else None)))
         sp.set(groups=len(plan.groups),
                cycles_per_token=plan.cycles_per_token)
     return plan
@@ -364,16 +380,20 @@ class ServeSlotPlan:
     crossbar_cols: int       # physical column budget
     max_slots: int           # admission cap (live sequences)
     ladder: Tuple[int, ...]  # precompiled pass widths
+    n_crossbars: int = 1     # parallel crossbars backing the budget
 
     def summary(self) -> str:
+        xb = (f" x {self.n_crossbars} crossbars"
+              if self.n_crossbars > 1 else "")
         return (f"serve slots ({self.op} n={self.n_bits}): "
                 f"{self.max_slots} live max "
-                f"({self.mac_cols} cols/chain of {self.crossbar_cols}), "
-                f"K ladder {self.ladder}")
+                f"({self.mac_cols} cols/chain of {self.crossbar_cols}"
+                f"{xb}), K ladder {self.ladder}")
 
 
 def plan_serve_slots(engine, n_bits: int = 8, *, op: str = "mac",
-                     max_slots: Optional[int] = None) -> ServeSlotPlan:
+                     max_slots: Optional[int] = None,
+                     device=None) -> ServeSlotPlan:
     """Derive the serving slot budget from the engine's column budget.
 
     The admission controller's ``max_live`` and the batcher's dynamic-K
@@ -383,12 +403,24 @@ def plan_serve_slots(engine, n_bits: int = 8, *, op: str = "mac",
     budget is the top rung — so every admitted sequence always has a
     precompiled pass width to ride. ``max_slots`` clamps the budget
     (e.g. the deprecated ``--pim-k`` override pinning batch width).
+
+    ``device`` scales the budget to a device hierarchy: anything with an
+    ``n_crossbars`` attribute (:class:`repro.device.DeviceConfig`). The
+    ladder stays *per crossbar* (each fused pass still compiles for one
+    crossbar), but the slot budget becomes ``top rung x n_crossbars`` —
+    the batcher drains an over-wide live set as one pass per crossbar.
     """
-    ladder = engine.k_ladder(op, n_bits, max_k=max_slots)
+    n_crossbars = max(1, int(getattr(device, "n_crossbars", 1)))
+    per_xbar_cap = (max_slots if device is None else None)
+    ladder = engine.k_ladder(op, n_bits, max_k=per_xbar_cap)
     mac_cols = engine.compile(op, n_bits).program.layout.n_cols
+    budget = ladder[-1] * n_crossbars
+    if max_slots is not None:
+        budget = min(budget, int(max_slots))
     return ServeSlotPlan(op=op, n_bits=n_bits, mac_cols=mac_cols,
                          crossbar_cols=engine.crossbar.cols or 0,
-                         max_slots=ladder[-1], ladder=ladder)
+                         max_slots=budget, ladder=ladder,
+                         n_crossbars=n_crossbars)
 
 
 def gemms_from_config(cfg, batch_tokens: int = 1) -> List[GemmShape]:

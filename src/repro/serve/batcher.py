@@ -112,10 +112,13 @@ class ContinuousBatcher:
             raise ValueError(
                 f"no ladder rung fits: a {n_bits}-bit MAC exceeds the "
                 f"crossbar column budget even alone")
+        # max_slots may exceed the top rung when the budget spans a
+        # device hierarchy's parallel crossbars
+        # (plan_serve_slots(..., device=...)): the round-trip path then
+        # drains the live set as one <= top-rung pass per crossbar, the
+        # resident path simply maps slots onto that many packed lanes.
         self.max_slots = (int(max_slots) if max_slots is not None
                           else self.ladder[-1])
-        if self.max_slots > self.ladder[-1]:
-            self.max_slots = self.ladder[-1]
         self.admission = AdmissionController(self.queue, self.max_slots,
                                              priority=priority)
         self.slots: List[Optional[SequenceState]] = [None] * self.max_slots
@@ -286,47 +289,56 @@ class ContinuousBatcher:
                     self._note_token(st, slot, seq, t_emit)
 
     def _step_roundtrip(self, st: StepStats, seqs) -> None:
-        """One co-scheduled round-trip pass (the PR7 path): marshal every
-        live slot's full latch state in, one fused K-wide pass, unmarshal
-        and fold ``(s, c)`` back on the host."""
-        k = self._choose_k(st.live)
-        st.k = k
-        with obs.span("serve.sched.step", live=st.live, k=k,
-                      queue_depth=st.queue_depth):
-            # Gather: live sequences ride the first `live` slots of the
-            # K-wide fused pass (slot-order stable), the rest pad with
-            # zero operands. Marshal all K operand sets as one batch per
-            # stream so mac_inputs is called once per slot.
-            groups = []
-            for _, seq in seqs:
-                a, b, s_i, c_i = seq.mac_operands()
-                groups.append(self.engine.mac_inputs(
-                    self.n, np.array([a], dtype=object),
-                    np.array([b], dtype=object),
-                    np.array([s_i], dtype=object),
-                    np.array([c_i], dtype=object)))
-            if k > st.live:
-                a, b, s_i, c_i = zero_operands()
-                pad = self.engine.mac_inputs(
-                    self.n, np.array([a], dtype=object),
-                    np.array([b], dtype=object),
-                    np.array([s_i], dtype=object),
-                    np.array([c_i], dtype=object))
-                groups.extend([pad] * (k - st.live))
+        """Co-scheduled round-trip passes (the PR7 path): marshal every
+        live slot's full latch state in, one fused K-wide pass per
+        crossbar-sized chunk, unmarshal and fold ``(s, c)`` back on the
+        host. With a single-crossbar budget (``max_slots <= top rung``)
+        this is exactly one pass; a device-scaled budget drains the live
+        set in ``ceil(live / top rung)`` passes — one per parallel
+        crossbar, issued back-to-back here since the host models the
+        crossbars as concurrent."""
+        top = self.ladder[-1]
+        chunks = [seqs[lo:lo + top] for lo in range(0, len(seqs), top)]
+        st.k = self._choose_k(min(st.live, top))
+        with obs.span("serve.sched.step", live=st.live, k=st.k,
+                      queue_depth=st.queue_depth,
+                      crossbars=len(chunks)):
+            for chunk in chunks:
+                k = self._choose_k(len(chunk))
+                # Gather: live sequences ride the first slots of the
+                # K-wide fused pass (slot-order stable), the rest pad
+                # with zero operands. Marshal all K operand sets as one
+                # batch per stream so mac_inputs is called once per slot.
+                groups = []
+                for _, seq in chunk:
+                    a, b, s_i, c_i = seq.mac_operands()
+                    groups.append(self.engine.mac_inputs(
+                        self.n, np.array([a], dtype=object),
+                        np.array([b], dtype=object),
+                        np.array([s_i], dtype=object),
+                        np.array([c_i], dtype=object)))
+                if k > len(chunk):
+                    a, b, s_i, c_i = zero_operands()
+                    pad = self.engine.mac_inputs(
+                        self.n, np.array([a], dtype=object),
+                        np.array([b], dtype=object),
+                        np.array([s_i], dtype=object),
+                        np.array([c_i], dtype=object))
+                    groups.extend([pad] * (k - len(chunk)))
 
-            bex = self.engine.compile_batch("mac", self.n, k)
-            outs = bex.run(groups, backend=self.backend)
-            self.passes += 1
-            self._m_pass.inc()
+                bex = self.engine.compile_batch("mac", self.n, k)
+                outs = bex.run(groups, backend=self.backend)
+                self.passes += 1
+                self._m_pass.inc()
 
-            # Scatter: fold each slot's MAC result back into its
-            # sequence and emit tokens.
-            t_emit = self.clock()
-            for (slot, seq), out in zip(seqs, outs):
-                s, c = self.engine.mac_accumulate(self.n, out)
-                tok = seq.absorb(int(s[0]), int(c[0]))
-                if tok is not None:
-                    self._note_token(st, slot, seq, t_emit)
+                # Scatter: fold each slot's MAC result back into its
+                # sequence and emit tokens.
+                t_emit = self.clock()
+                for (slot, seq), out in zip(chunk, outs):
+                    s, c = self.engine.mac_accumulate(self.n, out)
+                    tok = seq.absorb(int(s[0]), int(c[0]))
+                    if tok is not None:
+                        self._note_token(st, slot, seq, t_emit)
 
     # ------------------------------------------------------------ drain ----
     def run_until_idle(self, max_steps: int = 1_000_000) -> int:
