@@ -22,7 +22,7 @@ contributes ``wall_`` per-token throughput/latency metrics and hard
 in-process asserts: zero recompiles after warmup and bit-identical
 tokens across schedules.
 
-Baseline lives at ``benchmarks/baseline_pr9.json``; regenerate it (and
+Baseline lives at ``benchmarks/baseline_pr10.json``; regenerate it (and
 review the diff!) whenever a change legitimately improves or trades off
 these numbers.
 """
@@ -34,7 +34,7 @@ import os
 import sys
 
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__),
-                                "baseline_pr9.json")
+                                "baseline_pr10.json")
 TOLERANCE = 0.05          # >5% regression fails (deterministic cycles)
 WALL_PREFIX = "wall_"     # wall-clock: gated, but loosely
 WALL_TOLERANCE = 1.0      # >2x regression fails (absorbs runner noise)

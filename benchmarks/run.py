@@ -2,7 +2,7 @@
 
 Prints ``name,us_per_call,derived`` CSV (the harness contract) and, so
 the perf trajectory is tracked across PRs, writes a machine-readable
-JSON (``--json``, default ``BENCH_pr8.json``) mapping each section to
+JSON (``--json``, default ``BENCH_pr10.json``) mapping each section to
 its rows::
 
     {"sections": {"table1": [[name, us_per_call, derived], ...], ...},
@@ -10,9 +10,10 @@ its rows::
 
   PYTHONPATH=src python -m benchmarks.run [--section table1|table2|table3|
                                            fa|opt|sim|throughput|resident|
-                                           block_pim|serve_load|device|obs|
-                                           roofline|all|sec1,sec2,...]
-                                          [--json BENCH_pr9.json|off]
+                                           block_pim|serve_load|device|
+                                           faults|obs|roofline|all|
+                                           sec1,sec2,...]
+                                          [--json BENCH_pr10.json|off]
                                           [--trace OUT.json]
                                           [--metrics OUT.json]
 """
@@ -27,7 +28,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--section", default="all")
     ap.add_argument("--dryrun-json", default="dryrun_results.json")
-    ap.add_argument("--json", default="BENCH_pr9.json",
+    ap.add_argument("--json", default="BENCH_pr10.json",
                     help="machine-readable output path ('off' disables)")
     ap.add_argument("--trace", default=None, metavar="OUT.json",
                     help="enable span tracing and write a Chrome "
@@ -56,6 +57,7 @@ def main() -> None:
         "block_pim": tables.block_pim_plan,
         "serve_load": tables.serve_load,
         "device": tables.device_hierarchy,
+        "faults": tables.faults_table,
         "energy": tables.energy_table,
         "obs": tables.obs_metrics,
         "roofline": lambda: roofline_rows(args.dryrun_json),

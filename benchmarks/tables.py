@@ -620,6 +620,64 @@ def obs_metrics(n: int = 16) -> List[Row]:
     return rows
 
 
+def faults_table(n_values=(4, 8), rates=(0.0, 1e-5, 1e-4, 1e-3),
+                 rows_m: int = 32, n_elems: int = 8,
+                 spec: str = "jax:pack=true") -> List[Row]:
+    """Accuracy under injected device errors (repro.faults): the same
+    ``rows_m``-lane resident MAC chain driven at each transient
+    flip rate x operand width, with drain-time detection + bounded
+    replay recovery on and off. ``accuracy`` is the fraction of lanes
+    whose drained inner product matches the plain-int reference — the
+    curve the reliability section of the docs plots: detection-on stays
+    at (or near) 1.0 well past the rate where detection-off has already
+    lost lanes, until the unrecoverable regime where stuck replay
+    transients outrun the retry budget (those lanes are what serve-side
+    quarantine absorbs)."""
+    from repro import obs
+    from repro.engine import get_engine
+    from repro.faults import get_fault_model
+    rows: List[Row] = []
+    eng = get_engine()
+    rng = np.random.default_rng(17)
+    for n in n_values:
+        mask = (1 << (2 * n)) - 1
+        A = rng.integers(0, 1 << (n - 2), (rows_m, n_elems))
+        X = rng.integers(0, 1 << (n - 2), (rows_m, n_elems))
+        want = [int(sum(int(a) * int(x) for a, x in zip(ar, xr))) & mask
+                for ar, xr in zip(A, X)]
+        none = np.zeros(rows_m, dtype=bool)
+        for rate in rates:
+            for detect in ((True, False) if rate else (True,)):
+                if rate:
+                    fspec = f"flip@{rate:g}@3"
+                    backend = f"{spec},faults={fspec}"
+                    get_fault_model(fspec).reset()
+                else:
+                    backend = spec
+                c0 = dict(obs.dump()["counters"])
+                rex = eng.resident(n, rows=rows_m, backend=backend,
+                                   detect=detect)
+                t0 = time.perf_counter()
+                for e in range(n_elems):
+                    rex.step(A[:, e], X[:, e],
+                             fresh=None if e == 0 else none)
+                got = [int(v) for v in rex.drain()]
+                us = (time.perf_counter() - t0) * 1e6
+                c1 = obs.dump()["counters"]
+                d = lambda k: c1.get(k, 0) - c0.get(k, 0)  # noqa: E731
+                acc = sum(g == w for g, w in zip(got, want)) / rows_m
+                rows.append((
+                    f"faults/N={n},rate={rate:g},"
+                    f"detect={'on' if detect else 'off'}", us,
+                    f"accuracy={acc:.4f};rows={rows_m};elems={n_elems};"
+                    f"injected={d('faults.injected')};"
+                    f"detected={d('faults.detected')};"
+                    f"recovered={d('faults.recovered')};"
+                    f"unrecovered_lanes={int(rex.unrecovered.sum())};"
+                    f"replayed_passes={d('faults.replayed_passes')}"))
+    return rows
+
+
 def energy_table(n_values=(16, 32)) -> List[Row]:
     """Beyond-paper: per-multiplication energy proxy (gate activations x
     pJ/gate) — the axis RIME optimizes for; MultPIM wins it too because

@@ -61,6 +61,7 @@ def _default_builders() -> Dict[str, Callable[..., Program]]:
     from repro.core.matvec import multpim_mac
     from repro.core.multpim import multpim_multiplier
     from repro.core.multpim_area import multpim_area_multiplier
+    from repro.core.residue import residue_program
     from repro.core.staging import recomb_program, stage_program
     return {
         "multpim": multpim_multiplier,
@@ -70,6 +71,7 @@ def _default_builders() -> Dict[str, Callable[..., Program]]:
         "multpim_area": multpim_area_multiplier,
         "stage": stage_program,
         "recomb": recomb_program,
+        "residue": residue_program,
     }
 
 

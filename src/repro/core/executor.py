@@ -28,7 +28,7 @@ __all__ = ["run_numpy", "PackedProgram", "pack_program", "run_jax",
            "gate_eval_packed"]
 
 
-def gate_eval_packed(xp, gid, x0, x1, x2):
+def gate_eval_packed(xp, gid, x0, x1, x2, flip=None):
     """Word-wide bitwise gate evaluation over bit-plane packed rows,
     shared by the numpy and jnp packed interpreters (``xp`` is the array
     namespace — ``numpy`` or ``jax.numpy``).
@@ -39,6 +39,11 @@ def gate_eval_packed(xp, gid, x0, x1, x2):
     ``(x0&x1)|(x0&x2)|(x1&x2)`` — so one expression serves all 32/64
     packed rows of a word at once. NOP (and any unknown id) yields
     all-ones, the AND-write identity.
+
+    ``flip`` (optional packed words, same shape rules as the operands)
+    XORs transient faults into the gate result *before* the AND-write —
+    the :mod:`repro.faults` injection point. Flips are drawn only on
+    real gate slots, so NOP padding stays all-ones.
     """
     full = ~x0.dtype.type(0)
     maj = (x0 & x1) | (x0 & x2) | (x1 & x2)
@@ -48,7 +53,10 @@ def gate_eval_packed(xp, gid, x0, x1, x2):
           xp.where(gid == int(Gate.NAND), ~(x0 & x1),
           xp.where(gid == int(Gate.OR), x0 | x1,
           xp.where(gid == int(Gate.COPY), x0, full))))))
-    return out.astype(x0.dtype)
+    out = out.astype(x0.dtype)
+    if flip is not None:
+        out = out ^ flip.astype(x0.dtype)
+    return out
 
 
 # ---------------------------------------------------------------- numpy ----

@@ -216,6 +216,13 @@ class CoordAllocator:
     boundary — :meth:`align_scope` skips to the next empty bank — so a
     scope's intra-group broadcast traffic stays bank-local whenever the
     scope fits in one bank.
+
+    **Blocklist**: :meth:`block` marks a crossbar failed (a quarantine
+    escalation, a manufacture reject) — :meth:`place` skips blocked
+    coordinates and fails over to the next healthy spare, and
+    :attr:`n_free` stops counting them. Capacity exhaustion still
+    raises :class:`DeviceCapacityError`, now reached sooner by exactly
+    the blocked count.
     """
 
     def __init__(self, device: DeviceConfig):
@@ -223,11 +230,22 @@ class CoordAllocator:
         self._next = 0
         self.placed: List[Tuple[str, Coord]] = []
         self._scope = None
+        self.blocked: set = set()
 
     @property
     def n_free(self) -> int:
-        """Crossbars not yet handed out."""
-        return self.device.n_crossbars - self._next
+        """Healthy crossbars not yet handed out."""
+        return sum(1 for i in range(self._next, self.device.n_crossbars)
+                   if self.device.coord(i) not in self.blocked)
+
+    def block(self, coord) -> Coord:
+        """Mark one crossbar (a :class:`Coord` or its ``ch0.bg1.b2.x3``
+        string) failed: never handed out again; already-placed groups
+        keep their record (re-planning is the caller's decision)."""
+        c = Coord.parse(coord) if isinstance(coord, str) else coord
+        self.device.validate(c)
+        self.blocked.add(c)
+        return c
 
     def align_scope(self, scope: str) -> None:
         """Advance to the next bank boundary when ``scope`` changes, so
@@ -241,15 +259,20 @@ class CoordAllocator:
             self._next += per_bank - self._next % per_bank
 
     def place(self, label: str, scope: str = "") -> Coord:
-        """Allocate the next free crossbar for group ``label`` (the
-        planner's ``placer`` hook). Raises
-        :class:`DeviceCapacityError` when the device is full."""
+        """Allocate the next free *healthy* crossbar for group ``label``
+        (the planner's ``placer`` hook), failing over past blocked
+        coordinates. Raises :class:`DeviceCapacityError` when no healthy
+        crossbar is left."""
         if scope:
             self.align_scope(scope)
+        while (self._next < self.device.n_crossbars
+               and self.device.coord(self._next) in self.blocked):
+            self._next += 1
         if self._next >= self.device.n_crossbars:
             raise DeviceCapacityError(
                 f"device {self.device} is full ({self.device.n_crossbars}"
-                f" crossbars) -- cannot place group {label!r}")
+                f" crossbars, {len(self.blocked)} blocked) -- cannot "
+                f"place group {label!r}")
         coord = self.device.coord(self._next)
         self._next += 1
         self.placed.append((label, coord))

@@ -84,13 +84,25 @@ class DeviceCostReport:
             return float("inf")
         return self.tokens * 1e6 / self.latency_us
 
-    def capacity(self, target_tokens_per_sec: float) -> int:
+    def capacity(self, target_tokens_per_sec: float, *,
+                 spare_frac: float = 0.0) -> int:
         """Fleet sizing: devices needed to sustain an aggregate
-        ``target_tokens_per_sec`` (ceil; >= 1 for any positive target)."""
+        ``target_tokens_per_sec`` (ceil; >= 1 for any positive target).
+
+        ``spare_frac`` reserves failover headroom: the fleet must hold
+        the target even after losing that fraction of its devices to
+        quarantine (``CoordAllocator.block`` escalations), so the count
+        is sized against ``(1 - spare_frac)`` of each device's
+        throughput. ``spare_frac=0.25`` with a 4-device answer returns
+        6: lose any quarter of the fleet and the target still holds."""
         if target_tokens_per_sec <= 0:
             return 0
-        return max(1, math.ceil(target_tokens_per_sec
-                                / self.tokens_per_sec))
+        if not 0.0 <= spare_frac < 1.0:
+            raise ValueError(f"spare_frac must be in [0, 1), "
+                             f"got {spare_frac}")
+        return max(1, math.ceil(
+            target_tokens_per_sec
+            / (self.tokens_per_sec * (1.0 - spare_frac))))
 
     # -------------------------------------------------------- display ----
     def as_dict(self) -> Dict:

@@ -32,6 +32,17 @@ changes. The JAX/Pallas packed paths also macro-fuse consecutive cycles
 (``macro=``, :mod:`repro.compiler.macrocycle`) so the scan/grid executes
 ``O(T/factor)`` dispatches instead of one per cycle.
 
+Every stock backend also carries a **fault policy** (``faults=<key>``,
+e.g. ``"jax:pack=true,faults=flip@1e-5@7"``): the key resolves through
+:func:`repro.faults.get_fault_model` to a seeded device-error model
+whose transient flips and stuck-at maps are injected as bitwise masks
+into the packed interpreters (:func:`backend_fault_model` is the single
+resolution point). ``faults=none`` (or omitting the option) resolves to
+no model and leaves every path bit-identical to a fault-free build —
+regression-tested. Fault injection requires the packed representation:
+jax/pallas demand ``pack=true``, and the numpy backend transparently
+promotes to its 64-bit packed interpreter.
+
 ``resolve_backend`` accepts a Backend instance, a registered name, or a
 ``"name:key=val,key=val"`` spec string — e.g. ``"pallas:interpret=false,
 row_block=512"`` or ``"jax:pack=true,macro=8"`` — so CLI flags map
@@ -52,8 +63,26 @@ from repro.core.isa import Gate
 
 __all__ = ["Backend", "NumpyBackend", "JaxBackend", "PallasBackend",
            "ResidentIndex", "supports_resident", "register_backend",
-           "resolve_backend", "backend_names", "autotune_row_block",
+           "resolve_backend", "backend_names", "backend_fault_model",
+           "autotune_row_block",
            "DEFAULT_ROW_BLOCK", "MAX_ROW_BLOCK", "DEFAULT_MACRO"]
+
+
+def backend_fault_model(backend):
+    """The backend's resolved :class:`repro.faults.FaultModel`, or
+    ``None`` when faults are inactive — the single place a ``faults=``
+    spec becomes behavior. Inactive covers: no ``faults`` field, a
+    ``none``/``off`` key, and a model whose every rate is zero (so an
+    explicitly-zeroed model still takes the fault-free fast path and
+    stays bit-identical)."""
+    spec = getattr(backend, "faults", None)
+    if spec is None:
+        return None
+    from repro.faults import get_fault_model
+    model = get_fault_model(spec)
+    if model is None or not model.active():
+        return None
+    return model
 
 
 @runtime_checkable
@@ -94,6 +123,12 @@ class ResidentIndex:
     mac_dst: np.ndarray      # mac inputs   un ++ s_lo
     rec_dst: np.ndarray      # recomb inputs s_hi ++ c_hi ++ lo
     rec_out: np.ndarray      # recomb output out (2n bits)
+    # Optional residue-check wiring (detect mode, repro.faults): the
+    # compiled "residue" program reads the same carry-save planes as
+    # recomb and emits the 5-bit (mod-3 ++ mod-7) residue pair.
+    c_res: int = 0
+    res_dst: Optional[np.ndarray] = None  # residue inputs s_hi++c_hi++lo
+    res_out: Optional[np.ndarray] = None  # residue outputs r3 ++ r7
 
 
 class _ChainBase:
@@ -103,11 +138,15 @@ class _ChainBase:
     ``first``/``step`` advance every lane one MAC pass, ``drain`` runs
     the recombination program on a *separate* state and unpacks only its
     ``out`` planes — the single host transfer of a chain's lifetime.
+    With a ``residue`` program attached (detect mode), ``residue(dev)``
+    likewise runs the mod-3/mod-7 check on a separate state and unpacks
+    only its 5 result planes.
     """
 
     def __init__(self, mac, stage, recomb, idx: ResidentIndex, rows: int,
-                 word_bits: Optional[int]):
+                 word_bits: Optional[int], residue=None):
         self.mac, self.stage, self.recomb = mac, stage, recomb
+        self.res = residue
         self.idx = idx
         self.rows = rows
         self.word_bits = word_bits
@@ -125,14 +164,21 @@ class _ChainBase:
 
 
 class _NumpyChain(_ChainBase):
-    """Eager numpy resident chain (unpacked uint8 or 64-wide packed)."""
+    """Eager numpy resident chain (unpacked uint8 or 64-wide packed).
+
+    An active fault model promotes the chain to the 64-bit packed
+    representation regardless of ``pack`` (fault masks are packed
+    words) and routes every program pass through the fault-injecting
+    kernel."""
 
     def __init__(self, backend: "NumpyBackend", mac, stage, recomb,
-                 idx: ResidentIndex, rows: int):
+                 idx: ResidentIndex, rows: int, residue=None):
+        self.model = backend_fault_model(backend)
+        packed_words = backend.pack or self.model is not None
         super().__init__(mac, stage, recomb, idx, rows,
-                         64 if backend.pack else None)
+                         64 if packed_words else None, residue=residue)
         self.backend = backend
-        if backend.pack:
+        if packed_words:
             self._w = -(-rows // 64)
             self._full = ~np.uint64(0)
             self._dt = np.uint64
@@ -146,7 +192,15 @@ class _NumpyChain(_ChainBase):
 
     def _run(self, packed: PackedProgram, st: np.ndarray) -> np.ndarray:
         with obs.span("backend.kernel", backend=self.backend.name,
-                      rows=self.rows, cycles=packed.n_cycles):
+                      rows=self.rows, cycles=packed.n_cycles,
+                      faulty=self.model is not None):
+            if self.model is not None:
+                from repro.faults.inject import (numpy_kernel_packed_faulty,
+                                                 pass_fault_tensors)
+                flips, sa0, sa1 = pass_fault_tensors(
+                    self.model, packed, self.rows, 64)
+                return numpy_kernel_packed_faulty(packed, st, flips,
+                                                  sa0, sa1)
             if self.word_bits is None:
                 return NumpyBackend._kernel_unpacked(packed, st)
             return NumpyBackend._kernel_packed(packed, st)
@@ -187,6 +241,18 @@ class _NumpyChain(_ChainBase):
                       rows=self.rows):
             return unpack_rows(np.ascontiguousarray(out), self.rows)
 
+    def residue(self, dev: np.ndarray) -> np.ndarray:
+        idx = self.idx
+        rst = self._zeros(idx.c_res)
+        rst[:, idx.res_dst] = dev[:, idx.stage_src]
+        rst = self._run(self.res, rst)
+        out = rst[:, idx.res_out]
+        if self.word_bits is None:
+            return out
+        with obs.span("backend.unpack", backend=self.backend.name,
+                      rows=self.rows):
+            return unpack_rows(np.ascontiguousarray(out), self.rows)
+
 
 class _JaxChain(_ChainBase):
     """Packed jax resident chain: the inter-pass column moves, the stage
@@ -198,8 +264,9 @@ class _JaxChain(_ChainBase):
     """
 
     def __init__(self, backend, mac, stage, recomb, idx: ResidentIndex,
-                 rows: int):
-        super().__init__(mac, stage, recomb, idx, rows, 32)
+                 rows: int, residue=None):
+        super().__init__(mac, stage, recomb, idx, rows, 32,
+                         residue=residue)
         self.backend = backend
         self.name = backend.name
         import jax
@@ -244,6 +311,16 @@ class _JaxChain(_ChainBase):
         self._first = jax.jit(_first)
         self._step = jax.jit(_step, donate_argnums=donate)
         self._drain = jax.jit(_drain)
+        if residue is not None:
+            res_t, res_f = packed_device_tables(residue, macro)
+
+            def _residue(dev):
+                rst = jnp.zeros((W, idx.c_res), jnp.uint32)
+                rst = rst.at[:, idx.res_dst].set(dev[:, idx.stage_src])
+                rst = packed_scan_body(rst, *res_t, factor=res_f)
+                return rst[:, idx.res_out]
+
+            self._residue = jax.jit(_residue)
 
     def _kernel_span(self, programs: str, cycles: int):
         return obs.span("backend.kernel", backend=self.name,
@@ -265,29 +342,33 @@ class _JaxChain(_ChainBase):
         with obs.span("backend.unpack", backend=self.name, rows=self.rows):
             return unpack_rows(np.asarray(out), self.rows)
 
+    def residue(self, dev) -> np.ndarray:
+        with self._kernel_span("residue", self.res.n_cycles):
+            out = self._residue(dev)
+        with obs.span("backend.unpack", backend=self.name, rows=self.rows):
+            return unpack_rows(np.asarray(out), self.rows)
 
-class _PallasChain(_ChainBase):
-    """Packed Pallas resident chain: state stays a device ``(W, C)``
-    uint32 array between passes; the column moves and masks are eager
-    jnp index ops, each program pass one Pallas kernel launch."""
 
-    def __init__(self, backend: "PallasBackend", mac, stage, recomb,
-                 idx: ResidentIndex, rows: int):
-        super().__init__(mac, stage, recomb, idx, rows, 32)
+class _EagerPackedChain(_ChainBase):
+    """32-bit packed resident chain with *eager* jnp column moves
+    between program passes; subclasses pick the per-pass kernel via
+    ``_run``. State stays a device ``(W, C)`` uint32 array between
+    passes, exactly like :class:`_JaxChain`'s — only the dispatch
+    granularity differs (one launch per program instead of one fused
+    jit per pass)."""
+
+    def __init__(self, backend, mac, stage, recomb, idx: ResidentIndex,
+                 rows: int, residue=None):
+        super().__init__(mac, stage, recomb, idx, rows, 32,
+                         residue=residue)
         self.backend = backend
         import jax.numpy as jnp
         self._jnp = jnp
         self._w = -(-rows // 32)
         self._full = jnp.uint32(0xFFFFFFFF)
-        self._wb = max(8, (backend.row_block or DEFAULT_ROW_BLOCK) // 32)
 
-    def _run(self, packed: PackedProgram, st):
-        from repro.kernels.crossbar_step import crossbar_run_pallas_packed
-        with obs.span("backend.kernel", backend=self.backend.name,
-                      rows=self.rows, cycles=packed.n_cycles):
-            return crossbar_run_pallas_packed(
-                st, packed, macro=_macro_factor(self.backend.macro),
-                word_block=self._wb, interpret=self.backend.interpret)
+    def _run(self, packed: PackedProgram, st):  # pragma: no cover
+        raise NotImplementedError
 
     def first(self, planes: np.ndarray):
         jnp, idx = self._jnp, self.idx
@@ -320,6 +401,56 @@ class _PallasChain(_ChainBase):
                       rows=self.rows):
             return unpack_rows(np.asarray(rst[:, idx.rec_out]), self.rows)
 
+    def residue(self, dev) -> np.ndarray:
+        jnp, idx = self._jnp, self.idx
+        rst = jnp.zeros((self._w, idx.c_res), jnp.uint32)
+        rst = rst.at[:, idx.res_dst].set(dev[:, idx.stage_src])
+        rst = self._run(self.res, rst)
+        with obs.span("backend.unpack", backend=self.backend.name,
+                      rows=self.rows):
+            return unpack_rows(np.asarray(rst[:, idx.res_out]), self.rows)
+
+
+class _PallasChain(_EagerPackedChain):
+    """Packed Pallas resident chain: each program pass is one Pallas
+    kernel launch over the eager-chain state representation."""
+
+    def __init__(self, backend: "PallasBackend", mac, stage, recomb,
+                 idx: ResidentIndex, rows: int, residue=None):
+        super().__init__(backend, mac, stage, recomb, idx, rows,
+                         residue=residue)
+        self._wb = max(8, (backend.row_block or DEFAULT_ROW_BLOCK) // 32)
+
+    def _run(self, packed: PackedProgram, st):
+        from repro.kernels.crossbar_step import crossbar_run_pallas_packed
+        with obs.span("backend.kernel", backend=self.backend.name,
+                      rows=self.rows, cycles=packed.n_cycles):
+            return crossbar_run_pallas_packed(
+                st, packed, macro=_macro_factor(self.backend.macro),
+                word_block=self._wb, interpret=self.backend.interpret)
+
+
+class _FaultyJaxChain(_EagerPackedChain):
+    """Resident chain under an active fault model, serving both the jax
+    and pallas backends: every program pass runs the cycle-at-a-time
+    fault-injecting packed scan
+    (:func:`repro.kernels.ref.crossbar_run_ref_packed_faulty`), drawing
+    that pass's transient flips and the epoch's stuck maps from the
+    backend's model."""
+
+    def __init__(self, backend, mac, stage, recomb, idx: ResidentIndex,
+                 rows: int, residue=None):
+        super().__init__(backend, mac, stage, recomb, idx, rows,
+                         residue=residue)
+        self.model = backend_fault_model(backend)
+
+    def _run(self, packed: PackedProgram, st):
+        from repro.kernels.ref import crossbar_run_ref_packed_faulty
+        with obs.span("backend.kernel", backend=self.backend.name,
+                      rows=self.rows, cycles=packed.n_cycles, faulty=True):
+            return crossbar_run_ref_packed_faulty(st, packed, self.model,
+                                                  self.rows)
+
 
 # ---------------------------------------------------------------- numpy ----
 @dataclass(frozen=True)
@@ -331,18 +462,42 @@ class NumpyBackend:
     evaluation, ``np.bitwise_and.at`` AND-scatter. (Macro-cycle fusion
     is a dispatch-count optimization and does not apply to the eager
     numpy loop.)
+
+    ``faults=<key>`` activates a device-error model (see
+    :func:`backend_fault_model`); fault masks are packed words, so an
+    active model always runs the 64-bit packed fault-injecting
+    interpreter, even with ``pack=False``.
     """
 
     pack: bool = False
+    faults: Optional[str] = None
     name: str = "numpy"
 
     def run_state(self, packed: PackedProgram, state: np.ndarray) -> np.ndarray:
         """Interpret the packed tables over ``state`` (rows, C) {0,1}."""
+        model = backend_fault_model(self)
+        if model is not None:
+            return self._run_packed_faulty(packed, state, model)
         if self.pack:
             return self._run_packed(packed, state)
         with obs.span("backend.kernel", backend=self.name,
                       rows=state.shape[0], cycles=packed.n_cycles):
             return self._run_unpacked(packed, state)
+
+    def _run_packed_faulty(self, packed: PackedProgram, state: np.ndarray,
+                           model) -> np.ndarray:
+        from repro.faults.inject import (numpy_kernel_packed_faulty,
+                                         pass_fault_tensors)
+        state = np.asarray(state, dtype=np.uint8)
+        rows = state.shape[0]
+        with obs.span("backend.pack", backend=self.name, rows=rows):
+            st = pack_rows(state, 64)
+        flips, sa0, sa1 = pass_fault_tensors(model, packed, rows, 64)
+        with obs.span("backend.kernel", backend=self.name, rows=rows,
+                      cycles=packed.n_cycles, faulty=True):
+            st = numpy_kernel_packed_faulty(packed, st, flips, sa0, sa1)
+        with obs.span("backend.unpack", backend=self.name, rows=rows):
+            return unpack_rows(st, rows)
 
     def _run_unpacked(self, packed: PackedProgram,
                       state: np.ndarray) -> np.ndarray:
@@ -418,9 +573,11 @@ class NumpyBackend:
 
     def resident_chain(self, mac: PackedProgram, stage: PackedProgram,
                        recomb: PackedProgram, idx: ResidentIndex,
-                       rows: int) -> _NumpyChain:
+                       rows: int, residue: Optional[PackedProgram] = None
+                       ) -> _NumpyChain:
         """Build a resident MAC chain over this backend's interpreter."""
-        return _NumpyChain(self, mac, stage, recomb, idx, rows)
+        return _NumpyChain(self, mac, stage, recomb, idx, rows,
+                           residue=residue)
 
 
 # ------------------------------------------------------------------ JAX ----
@@ -438,27 +595,48 @@ class JaxBackend:
     word, :func:`repro.kernels.ref.crossbar_run_ref_packed`) with
     ``macro``-deep macro-cycle fusion (``None`` = the stock
     ``DEFAULT_MACRO`` when packed, no fusion otherwise).
+
+    ``faults=<key>`` activates a device-error model (see
+    :func:`backend_fault_model`); requires ``pack=True`` and runs the
+    cycle-at-a-time fault-injecting scan (macro fusion is bypassed —
+    flip draws index per-cycle tables).
     """
 
     pack: bool = False
     macro: Optional[int] = None
+    faults: Optional[str] = None
     name: str = "jax"
+
+    def _require_pack_for_faults(self, model):
+        if model is not None and not self.pack:
+            raise ValueError(
+                f"fault injection on the {self.name} backend requires "
+                f"pack=true (spec '{self.name}:pack=true,"
+                f"faults={self.faults}') — fault masks are packed words")
 
     def run_state(self, packed: PackedProgram, state: np.ndarray) -> np.ndarray:
         """Run the jitted scan over ``state`` (rows, C) {0,1}."""
         import jax.numpy as jnp
 
         from repro.kernels.ref import (crossbar_run_ref,
-                                       crossbar_run_ref_packed)
+                                       crossbar_run_ref_packed,
+                                       crossbar_run_ref_packed_faulty)
+        model = backend_fault_model(self)
+        self._require_pack_for_faults(model)
         if self.pack:
             rows = state.shape[0]
             with obs.span("backend.pack", backend=self.name, rows=rows):
                 words = pack_rows(np.asarray(state, dtype=np.uint8), 32)
             with obs.span("backend.kernel", backend=self.name, rows=rows,
-                          cycles=packed.n_cycles):
-                final = crossbar_run_ref_packed(
-                    jnp.asarray(words), packed,
-                    macro=_macro_factor(self.macro))
+                          cycles=packed.n_cycles,
+                          faulty=model is not None):
+                if model is not None:
+                    final = crossbar_run_ref_packed_faulty(
+                        jnp.asarray(words), packed, model, rows)
+                else:
+                    final = crossbar_run_ref_packed(
+                        jnp.asarray(words), packed,
+                        macro=_macro_factor(self.macro))
             with obs.span("backend.unpack", backend=self.name, rows=rows):
                 return unpack_rows(np.asarray(final), rows)
         with obs.span("backend.kernel", backend=self.name,
@@ -469,12 +647,16 @@ class JaxBackend:
 
     def resident_chain(self, mac: PackedProgram, stage: PackedProgram,
                        recomb: PackedProgram, idx: ResidentIndex,
-                       rows: int) -> _JaxChain:
+                       rows: int, residue: Optional[PackedProgram] = None):
         """Build a packed device-resident MAC chain (needs pack=true)."""
         if not self.pack:
             raise ValueError("resident execution on the jax backend "
                              "requires pack=true (spec 'jax:pack=true')")
-        return _JaxChain(self, mac, stage, recomb, idx, rows)
+        if backend_fault_model(self) is not None:
+            return _FaultyJaxChain(self, mac, stage, recomb, idx, rows,
+                                   residue=residue)
+        return _JaxChain(self, mac, stage, recomb, idx, rows,
+                         residue=residue)
 
 
 # --------------------------------------------------------------- Pallas ----
@@ -511,13 +693,22 @@ class PallasBackend:
     *word* tile of ``row_block / 32`` words (floor 8, the int32 sublane
     tile) and gates evaluate bitwise on the VPU. ``macro`` is the
     macro-cycle fusion depth, as on :class:`JaxBackend`.
+
+    ``faults=<key>`` activates a device-error model (requires
+    ``pack=True``); faulty passes run the shared cycle-at-a-time
+    fault-injecting jnp scan rather than the Pallas kernel — fault
+    injection is a simulation study, the kernel stays the fault-free
+    performance path.
     """
 
     interpret: bool = True
     row_block: Optional[int] = None
     pack: bool = False
     macro: Optional[int] = None
+    faults: Optional[str] = None
     name: str = "pallas"
+
+    _require_pack_for_faults = JaxBackend._require_pack_for_faults
 
     def run_state(self, packed: PackedProgram, state: np.ndarray) -> np.ndarray:
         """Run the Pallas kernel over ``state`` (rows, C) {0,1}."""
@@ -525,17 +716,26 @@ class PallasBackend:
 
         from repro.kernels.crossbar_step import (crossbar_run_pallas,
                                                  crossbar_run_pallas_packed)
+        model = backend_fault_model(self)
+        self._require_pack_for_faults(model)
         if self.pack:
             rows = state.shape[0]
             with obs.span("backend.pack", backend=self.name, rows=rows):
                 words = pack_rows(np.asarray(state, dtype=np.uint8), 32)
             word_block = max(8, (self.row_block or DEFAULT_ROW_BLOCK) // 32)
             with obs.span("backend.kernel", backend=self.name, rows=rows,
-                          cycles=packed.n_cycles):
-                final = crossbar_run_pallas_packed(
-                    jnp.asarray(words), packed,
-                    macro=_macro_factor(self.macro),
-                    word_block=word_block, interpret=self.interpret)
+                          cycles=packed.n_cycles,
+                          faulty=model is not None):
+                if model is not None:
+                    from repro.kernels.ref import \
+                        crossbar_run_ref_packed_faulty
+                    final = crossbar_run_ref_packed_faulty(
+                        jnp.asarray(words), packed, model, rows)
+                else:
+                    final = crossbar_run_pallas_packed(
+                        jnp.asarray(words), packed,
+                        macro=_macro_factor(self.macro),
+                        word_block=word_block, interpret=self.interpret)
             with obs.span("backend.unpack", backend=self.name, rows=rows):
                 return unpack_rows(np.asarray(final), rows)
         with obs.span("backend.kernel", backend=self.name,
@@ -549,12 +749,16 @@ class PallasBackend:
 
     def resident_chain(self, mac: PackedProgram, stage: PackedProgram,
                        recomb: PackedProgram, idx: ResidentIndex,
-                       rows: int) -> _PallasChain:
+                       rows: int, residue: Optional[PackedProgram] = None):
         """Build a packed device-resident MAC chain (needs pack=true)."""
         if not self.pack:
             raise ValueError("resident execution on the pallas backend "
                              "requires pack=true (spec 'pallas:pack=true')")
-        return _PallasChain(self, mac, stage, recomb, idx, rows)
+        if backend_fault_model(self) is not None:
+            return _FaultyJaxChain(self, mac, stage, recomb, idx, rows,
+                                   residue=residue)
+        return _PallasChain(self, mac, stage, recomb, idx, rows,
+                            residue=residue)
 
 
 def supports_resident(backend) -> bool:
@@ -620,5 +824,5 @@ def resolve_backend(spec: Union[None, str, Backend],
         raise ValueError(
             f"backend spec '{spec}': {e} — options the '{name}' backend "
             f"accepts are its constructor fields "
-            f"(e.g. numpy: pack; jax: pack, macro; pallas: interpret, "
-            f"row_block, pack, macro)") from e
+            f"(e.g. numpy: pack, faults; jax: pack, macro, faults; "
+            f"pallas: interpret, row_block, pack, macro, faults)") from e

@@ -45,7 +45,8 @@ from repro import obs
 from repro.core.bits import from_bits, to_bits
 from repro.core.costmodel import CrossbarSpec
 
-from .backends import Backend, resolve_backend, supports_resident
+from .backends import (Backend, backend_fault_model, resolve_backend,
+                       supports_resident)
 from .executable import (BatchedExecutable, Executable, GroupedExecutable,
                          ResidentExecutable)
 
@@ -67,6 +68,7 @@ OP_KINDS: Dict[str, str] = {
     "multpim_area": "multpim_area",
     "stage": "stage",
     "recomb": "recomb",
+    "residue": "residue",
 }
 
 
@@ -349,7 +351,8 @@ class Engine:
 
     def resident(self, n: int, *, rows: int,
                  backend: Union[None, str, Backend] = None,
-                 verify: bool = True) -> ResidentExecutable:
+                 verify: bool = True,
+                 detect: Optional[bool] = None) -> ResidentExecutable:
         """``rows`` device-resident carry-save MAC chains (one per
         crossbar row) — see
         :class:`~repro.engine.executable.ResidentExecutable`.
@@ -361,6 +364,16 @@ class Engine:
         support resident execution (numpy always; jax/pallas with
         ``pack=true`` — see
         :func:`repro.engine.backends.supports_resident`).
+
+        ``detect`` controls drain-time corruption detection
+        (:mod:`repro.faults`): ``None`` (the default policy) turns it on
+        exactly when the backend carries an active fault model
+        (``faults=<key>`` in its spec), so fault-free runs compile no
+        extra program and stay bit-identical; ``True``/``False`` force
+        it (e.g. the accuracy-under-error benchmark measures detection
+        off under injected faults). Detection compiles the ``residue``
+        check program alongside the chain and arms bounded
+        replay-recovery in :meth:`ResidentExecutable.drain`.
         """
         bk = resolve_backend(backend, self.backend)
         if not supports_resident(bk):
@@ -368,16 +381,23 @@ class Engine:
                 f"backend '{bk.name}' does not support resident "
                 f"execution (jax/pallas need pack=true, e.g. "
                 f"'jax:pack=true')")
+        if detect is None:
+            detect = backend_fault_model(bk) is not None
         with obs.span("engine.resident", n=n, rows=rows,
-                      backend=bk.name):
+                      backend=bk.name, detect=detect):
             mac_e = self.cache.get_or_compile(
                 "multpim_mac", n, config=self.pass_config, verify=verify)
             stage_e = self.cache.get_or_compile(
                 "stage", n, config=self.pass_config, verify=verify)
             rec_e = self.cache.get_or_compile(
                 "recomb", n, config=self.pass_config, verify=verify)
+            res_e = None
+            if detect:
+                res_e = self.cache.get_or_compile(
+                    "residue", n, config=self.pass_config, verify=verify)
         return ResidentExecutable(mac_e, stage_e, rec_e, bk, rows,
-                                  crossbar=self.crossbar, engine=self)
+                                  crossbar=self.crossbar, engine=self,
+                                  residue_entry=res_e)
 
     def staging_cycles(self, n: int) -> int:
         """Measured cycles of the compiled inter-pass ``stage`` program

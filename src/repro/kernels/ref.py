@@ -24,6 +24,7 @@ from repro.core.executor import PackedProgram, gate_eval_packed
 from repro.core.isa import Gate
 
 __all__ = ["crossbar_run_ref", "crossbar_run_ref_packed",
+           "crossbar_run_ref_packed_faulty",
            "packed_scan_body", "packed_device_tables",
            "bitserial_matmul_ref"]
 
@@ -128,6 +129,56 @@ def crossbar_run_ref_packed(state_words: jnp.ndarray, packed: PackedProgram,
     pad = packed.init_mask.shape[1] - state_words.shape[1]
     st = jnp.pad(state_words.astype(jnp.uint32), ((0, 0), (0, pad)))
     st = _packed_scan(st, *tabs, factor=factor)
+    return st[:, :state_words.shape[1]]
+
+
+@jax.jit
+def _faulty_scan(st, gate_id, in_cols, out_col, init_words, flips, sa0, sa1):
+    """Cycle-at-a-time packed scan with fault masks threaded through:
+    the jnp twin of :func:`repro.faults.numpy_kernel_packed_faulty`
+    (same cycle semantics — SET, gather, gate^flip, AND-write, stuck).
+    Tables are factor-1 :func:`packed_device_tables`; ``flips`` is
+    ``(T, W, M)`` per-cycle flip words, the stuck maps ``(W, C)``."""
+    st = (st & ~sa0) | sa1
+    def step(st, tabs):
+        gids, icss, ocss, inis, flip = tabs
+        gid, ics, ocs, ini = gids[0], icss[0], ocss[0], inis[0]
+        st = st | ini[None, :]
+        x0 = st[:, ics[:, 0]]
+        x1 = st[:, ics[:, 1]]
+        x2 = st[:, ics[:, 2]]
+        res = gate_eval_packed(jnp, gid[None, :], x0, x1, x2, flip=flip)
+        # Flips are drawn only on real gate slots (gate_id != NOP), so
+        # duplicate scratch writes stay all-ones and any-winner .set
+        # matches numpy's AND-accumulating scatter bit for bit.
+        st = st.at[:, ocs].set(st[:, ocs] & res)
+        st = (st & ~sa0) | sa1
+        return st, None
+
+    st, _ = jax.lax.scan(step, st,
+                         (gate_id, in_cols, out_col, init_words, flips))
+    return st
+
+
+def crossbar_run_ref_packed_faulty(state_words: jnp.ndarray,
+                                   packed: PackedProgram, model,
+                                   rows: int) -> jnp.ndarray:
+    """One *faulty* pass of ``packed`` over 32-bit packed state: draws
+    the pass's fault tensors from ``model``
+    (:func:`repro.faults.pass_fault_tensors` — advances the model's
+    monotone pass counter) and runs the fault-injecting scan. Always
+    cycle-at-a-time: flip sites index per-cycle tables, so macro fusion
+    is bypassed on this path. Serves both the jax and pallas backends
+    when a fault model is active (injection is a simulation study — the
+    Pallas kernel remains the fault-free performance path).
+    """
+    from repro.faults.inject import pass_fault_tensors
+    flips, sa0, sa1 = pass_fault_tensors(model, packed, rows, 32)
+    tabs, _ = packed_device_tables(packed, 1)
+    pad = packed.init_mask.shape[1] - state_words.shape[1]
+    st = jnp.pad(state_words.astype(jnp.uint32), ((0, 0), (0, pad)))
+    st = _faulty_scan(st, *tabs, jnp.asarray(flips), jnp.asarray(sa0),
+                      jnp.asarray(sa1))
     return st[:, :state_words.shape[1]]
 
 

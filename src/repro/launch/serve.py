@@ -135,6 +135,19 @@ def _run_traffic(args) -> None:
     from repro.serve import (DECODE_ELEMS, TrafficConfig, compare_modes,
                              generate, run_load)
     engine = get_engine()
+    fault_spec = None
+    if args.fault_rate is not None:
+        # Compose the fault model into the backend spec so the packed
+        # executors inject at the device layer; seed it explicitly so a
+        # rerun replays the identical fault sequence.
+        from repro.faults import get_fault_model
+        fault_spec = f"flip@{args.fault_rate:g}@{args.fault_seed}"
+        base = args.pim_backend or "numpy"
+        sep = "," if ":" in base else ":"
+        args.pim_backend = f"{base}{sep}faults={fault_spec}"
+        get_fault_model(fault_spec).reset()
+        log.info("fault injection: %s (backend %s)", fault_spec,
+                 args.pim_backend)
     if args.pim_backend is not None:
         engine.backend = resolve_backend(args.pim_backend)
     n = args.pim_bits
@@ -166,7 +179,45 @@ def _run_traffic(args) -> None:
                   priority=args.traffic_priority)
     gating = (args.traffic_check is not None
               or args.traffic_resident_check is not None)
-    if args.traffic_compare or gating:
+    if (fault_spec is not None or args.fault_check
+            or args.watchdog is not None):
+        # Fault/watchdog mode is a single continuous run: replaying the
+        # trace under other schedules would advance the shared fault
+        # model's pass counter, so cross-mode parity is not meaningful
+        # under injection — the bit-exactness check is against the
+        # plain-int reference tokens instead.
+        cont = run_load(engine, reqs, mode="continuous",
+                        watchdog_s=args.watchdog, **common)
+        _log_report(cont)
+        c = obs.dump()["counters"]
+        log.info("faults: injected=%d detected=%d (+%d residue) "
+                 "recovered=%d unrecovered=%d escaped=%d | restarts=%d "
+                 "quarantined=%d displaced=%d rejected=%d",
+                 c.get("faults.injected", 0), c.get("faults.detected", 0),
+                 c.get("faults.detected_residue", 0),
+                 c.get("faults.recovered", 0),
+                 c.get("faults.unrecovered", 0),
+                 c.get("faults.escaped", 0),
+                 c.get("serve.fault.restarts", 0),
+                 c.get("serve.fault.quarantined", 0),
+                 c.get("serve.fault.displaced", 0),
+                 c.get("serve.rejected", 0))
+        if args.fault_check:
+            fails = []
+            if not cont.bit_exact:
+                fails.append(f"{cont.escaped_tokens} corrupt token(s) "
+                             f"escaped detection")
+            if cont.recompiles != 0:
+                fails.append(f"recompiles after warmup = {cont.recompiles}"
+                             f" (recovery must not recompile)")
+            if cont.aborted:
+                fails.append("watchdog aborted the run")
+            if fails:
+                raise SystemExit("fault gate FAILED: " + "; ".join(fails))
+            log.info("fault gate passed: bit-exact under %s, zero "
+                     "recompiles, no abort",
+                     fault_spec or "fault-free serving")
+    elif args.traffic_compare or gating:
         res = compare_modes(engine, reqs, **common)
         cont, rt, ser = res["continuous"], res["roundtrip"], res["serial"]
         _log_report(cont)
@@ -297,6 +348,25 @@ def main() -> None:
                          "than the per-pass host round-trip on the same "
                          "trace (plus the zero-recompile and bit-parity "
                          "checks)")
+    ap.add_argument("--fault-rate", type=float, default=None, metavar="P",
+                    help="inject transient device faults: per-gate "
+                         "bit-flip probability P, composed into the "
+                         "backend spec as faults=flip@P@SEED (traffic "
+                         "mode; detection + self-healing recovery run "
+                         "automatically on the resident path)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="fault-model seed (reruns replay the identical "
+                         "fault sequence)")
+    ap.add_argument("--fault-check", action="store_true",
+                    help="hard gate: exit nonzero unless the faulted "
+                         "traffic run stays bit-exact against the "
+                         "reference tokens with zero recompiles after "
+                         "warmup and no watchdog abort")
+    ap.add_argument("--watchdog", type=float, default=None, metavar="S",
+                    help="stall watchdog budget in seconds: abort the "
+                         "traffic run cleanly (partial stats, exit "
+                         "report aborted=True) if the scheduler makes "
+                         "no progress for S seconds")
     ap.add_argument("--trace", default=None, metavar="OUT.json",
                     help="enable span tracing and write a Chrome "
                          "trace-event file (open in chrome://tracing or "
@@ -355,7 +425,17 @@ def main() -> None:
             placer = CoordAllocator(device).place
             log.info("device hierarchy: %s (%d crossbars, %d banks)",
                      device, device.n_crossbars, device.n_banks)
-        plan = plan_block(cfg, engine, placer=placer)
+        # With a real device budget, degrade gracefully on capacity
+        # exhaustion: shed the groups that don't fit instead of dying,
+        # and say exactly what was lost.
+        plan = plan_block(cfg, engine, placer=placer,
+                          on_capacity="shed" if device is not None
+                          else "raise")
+        if plan.shed:
+            log.warning("device %s too small for scope plan: shed %d "
+                        "group(s): %s (served scopes: %s)",
+                        device, len(plan.shed), ", ".join(plan.shed),
+                        list(plan.scopes))
 
     rng = np.random.default_rng(0)
     prompts = jnp.asarray(rng.integers(3, cfg.vocab_size,

@@ -247,6 +247,10 @@ class BlockPlan:
 
     n_bits: int
     groups: List[LinearGroup] = field(default_factory=list)
+    # Group labels the planner shed because the device ran out of
+    # healthy crossbars (``plan_block(..., on_capacity="shed")``); empty
+    # under the default raising policy.
+    shed: List[str] = field(default_factory=list)
 
     def scope_groups(self, scope: str) -> List[LinearGroup]:
         return [g for g in self.groups if g.scope == scope]
@@ -300,12 +304,16 @@ class BlockPlan:
                 f"({g.cycles_per_token:,} cyc)")
         if self.groups:
             lines.append(f"  TOTAL {self.cycles_per_token:,} cycles/token")
+        if self.shed:
+            lines.append(f"  SHED {len(self.shed)} group"
+                         f"{'s' if len(self.shed) != 1 else ''} "
+                         f"(device capacity): {', '.join(self.shed)}")
         return "\n".join(lines)
 
 
 def plan_block(cfg, engine=None,
                scopes: Optional[Tuple[str, ...]] = None,
-               placer=None) -> BlockPlan:
+               placer=None, on_capacity: str = "raise") -> BlockPlan:
     """Lower a model's block linears onto co-scheduled crossbar groups.
 
     ``scopes`` defaults to what the config's PIM flags enable
@@ -324,8 +332,21 @@ def plan_block(cfg, engine=None,
     placer groups keep the flat parallel-crossbars model
     (``coord=None``). The planner itself stays device-agnostic — it
     only calls back.
+
+    ``on_capacity`` decides what happens when the placer raises
+    :class:`repro.device.DeviceCapacityError`: ``"raise"`` (default)
+    propagates — a plan that does not fit the device is an error;
+    ``"shed"`` degrades gracefully — the group is dropped *before* its
+    compile (no wasted compilation), its label is recorded in
+    :attr:`BlockPlan.shed`, and the shortfall lands on the
+    ``plan.capacity_shed`` counter so operators see exactly which
+    groups a degraded device stopped serving.
     """
+    from repro.device.config import DeviceCapacityError
     from repro.engine import GroupSpec, get_engine
+    if on_capacity not in ("raise", "shed"):
+        raise ValueError(f"on_capacity {on_capacity!r} not in "
+                         f"('raise', 'shed')")
     eng = engine if engine is not None else get_engine()
     scopes = cfg.pim_scopes() if scopes is None else scopes
     n = cfg.pim_linear_bits
@@ -344,13 +365,28 @@ def plan_block(cfg, engine=None,
             # together).
             for lo in range(0, len(members), per_group):
                 part = members[lo:lo + per_group]
+                label = ",".join(l.name for l in part)
+                # Place before compiling so a shed group costs nothing:
+                # capacity exhaustion is known from the coordinate
+                # allocator alone.
+                coord = None
+                if placer is not None:
+                    try:
+                        coord = placer(label, scope)
+                    except DeviceCapacityError as exc:
+                        if on_capacity == "raise":
+                            raise
+                        plan.shed.append(label)
+                        obs.counter("plan.capacity_shed").inc()
+                        obs.instant("plan.shed", scope=scope,
+                                    group=label, reason=str(exc))
+                        continue
                 base = [GroupSpec("mac", n, label=l.name) for l in part]
                 chains = eng.group_counts(base,
                                           weights=[l.stream for l in part])
                 gex = eng.compile_group(
                     [GroupSpec("mac", n, copies=c, label=l.name)
                      for l, c in zip(part, chains)])
-                label = ",".join(l.name for l in part)
                 plan.groups.append(LinearGroup(
                     scope=scope, linears=part, chains=chains,
                     pass_cycles=gex.n_cycles,
@@ -358,9 +394,8 @@ def plan_block(cfg, engine=None,
                     n_bits=n, staging_cycles=eng.staging_cycles(n),
                     recomb_cycles=eng.recomb_cycles(2 * n),
                     executable=gex,
-                    coord=(placer(label, scope) if placer is not None
-                           else None)))
-        sp.set(groups=len(plan.groups),
+                    coord=coord))
+        sp.set(groups=len(plan.groups), shed=len(plan.shed),
                cycles_per_token=plan.cycles_per_token)
     return plan
 

@@ -29,6 +29,23 @@ are memoized on the engine and precompiled by
 **zero recompiles** (the load harness and the CI smoke scenario both
 enforce this). Idle slots pad with zero operands; their columns/lanes
 still cycle but touch nothing observable.
+
+**Self-healing under device faults** (`repro.faults`): when the backend
+carries an active fault model, the resident executable detects and
+replays corrupted lanes at every drain; lanes it reports *unrecovered*
+restart their sequence's current token stream in place, and a lane that
+fails ``lane_fail_threshold`` consecutive drains (a stuck-at fault
+replay cannot beat) is **quarantined** — masked out of the executable's
+checks, removed from the assignable slot set, its sequence remapped to
+a spare slot (or parked for the next free one). All of it is pure slot
+reassignment: zero recompiles, and the fresh-lane mask is the restart
+substrate. The round-trip substrate instead runs a cheap host-side
+mod-21 token checksum (:meth:`SequenceState.check_token`) with bounded
+stream restarts. When quarantine exhausts every slot the batcher sheds
+load: queued work is rejected with ``phase="rejected"`` rather than
+hanging. A ``watchdog_s`` budget flags scheduler steps that overrun it
+(``serve.watchdog.slow_passes``) — the harness layers a hard abort on
+top.
 """
 from __future__ import annotations
 
@@ -39,7 +56,9 @@ from typing import List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro import obs
-from repro.engine.backends import resolve_backend, supports_resident
+from repro.engine.backends import (backend_fault_model, resolve_backend,
+                                   supports_resident)
+from repro.faults import RetryPolicy
 
 from .request import AdmissionController, Request, RequestQueue
 from .sequence import DECODE_ELEMS, SequenceState, zero_operands
@@ -86,6 +105,9 @@ class ContinuousBatcher:
                  priority: str = "prefill",
                  backend: Union[None, str, object] = None,
                  resident: Optional[bool] = None,
+                 watchdog_s: Optional[float] = None,
+                 retry: Optional[RetryPolicy] = None,
+                 lane_fail_threshold: int = 2,
                  clock=time.perf_counter):
         self.engine = engine
         self.queue = queue if queue is not None else RequestQueue()
@@ -93,7 +115,12 @@ class ContinuousBatcher:
         self.decode_elems = decode_elems
         self.backend = backend
         self.clock = clock
+        self.watchdog_s = watchdog_s
         bk = resolve_backend(backend, engine.backend)
+        self.fault_model = backend_fault_model(bk)
+        self.retry = retry if retry is not None else RetryPolicy(
+            scope="serve.restart")
+        self.lane_fail_threshold = int(lane_fail_threshold)
         if resident is None:
             self.resident = supports_resident(bk)
         else:
@@ -125,6 +152,15 @@ class ContinuousBatcher:
         self.passes = 0
         self.tokens_emitted = 0
         self.finished_reqs: List[Request] = []
+        # Self-healing state: quarantined lanes, consecutive unrecovered
+        # drains per lane, sequences awaiting a spare slot, per-request
+        # consecutive checksum restarts (round-trip substrate), and the
+        # requests shed once capacity is exhausted.
+        self._bad_slots: set = set()
+        self._lane_fails = np.zeros(self.max_slots, dtype=np.int64)
+        self._displaced: List[SequenceState] = []
+        self._tok_retries: dict = {}
+        self.rejected_reqs: List[Request] = []
         # Cached instrument refs (hot path — see repro.obs.metrics).
         self._m_tok = obs.counter("serve.sched.tokens")
         self._m_pass = obs.counter("serve.sched.passes")
@@ -135,6 +171,12 @@ class ContinuousBatcher:
         self._h_ttft = obs.windowed_histogram("serve.sched.ttft_us")
         self._h_tok = obs.windowed_histogram("serve.sched.token_latency_us")
         self._h_wait = obs.windowed_histogram("serve.sched.queue_wait_us")
+        self._m_restart = obs.counter("serve.fault.restarts")
+        self._m_quar = obs.counter("serve.fault.quarantined")
+        self._m_disp = obs.counter("serve.fault.displaced")
+        self._m_rej = obs.counter("serve.rejected")
+        self._m_slow = obs.counter("serve.watchdog.slow_passes")
+        self._g_quar = obs.gauge("serve.fault.quarantined_lanes")
 
     # -------------------------------------------------------- compile ----
     def _resident_exe(self):
@@ -169,8 +211,21 @@ class ContinuousBatcher:
         return sum(1 for s in self.slots if s is not None)
 
     @property
+    def capacity(self) -> int:
+        """Slots still assignable after lane quarantine."""
+        return self.max_slots - len(self._bad_slots)
+
+    @property
     def idle(self) -> bool:
-        return self.live == 0 and len(self.queue) == 0
+        return (self.live == 0 and len(self.queue) == 0
+                and not self._displaced)
+
+    def _free_slot(self) -> Optional[int]:
+        """First assignable slot: empty and not quarantined."""
+        for i, s in enumerate(self.slots):
+            if s is None and i not in self._bad_slots:
+                return i
+        return None
 
     def _choose_k(self, live: int) -> int:
         """Smallest precompiled rung that holds the live batch."""
@@ -180,10 +235,45 @@ class ContinuousBatcher:
         return self.ladder[-1]
 
     # ------------------------------------------------------------ step ----
+    def _reject(self, req: Request, reason: str) -> None:
+        """Shed one request with a clear terminal state instead of
+        letting it starve in the queue."""
+        req.phase = "rejected"
+        self.rejected_reqs.append(req)
+        self._m_rej.inc()
+        obs.instant("serve.reject", rid=req.rid, reason=reason)
+
     def _admit(self, now: float) -> int:
-        admitted = self.admission.admit(self.live, now)
+        # Displaced sequences (quarantine survivors) outrank the queue:
+        # they already hold emitted tokens and restart their current
+        # stream on whatever spare lane frees up first.
+        while self._displaced:
+            slot = self._free_slot()
+            if slot is None:
+                break
+            self.slots[slot] = self._displaced.pop(0)
+            obs.instant("serve.remap", rid=self.slots[slot].req.rid,
+                        slot=slot)
+        # Quarantine shrinks the admission budget; at zero capacity the
+        # batcher degrades by shedding instead of hanging.
+        self.admission.max_live = max(1, self.capacity)
+        if self.capacity == 0:
+            for seq in self._displaced:
+                self._reject(seq.req, "no healthy lanes")
+            self._displaced.clear()
+            while True:
+                req = self.queue.pop()
+                if req is None:
+                    break
+                self._reject(req, "no healthy lanes")
+            return 0
+        admitted = self.admission.admit(self.live + len(self._displaced),
+                                        now)
         for req in admitted:
-            slot = self.slots.index(None)
+            slot = self._free_slot()
+            if slot is None:        # budget raced a quarantine: requeue
+                self.queue.submit(req, req.t_submit)
+                break
             self.slots[slot] = SequenceState(req, self.n,
                                              self.decode_elems)
             wait = (now - req.t_submit) if req.t_submit is not None else 0.0
@@ -201,6 +291,7 @@ class ContinuousBatcher:
         admissible) returns ``live=0`` without touching the engine.
         """
         now = self.clock() if now is None else now
+        t_start = self.clock()
         st = StepStats(queue_depth=len(self.queue))
         st.admitted = self._admit(now)
         seqs = [(i, s) for i, s in enumerate(self.slots) if s is not None]
@@ -215,6 +306,13 @@ class ContinuousBatcher:
             self._step_resident(st, seqs)
         else:
             self._step_roundtrip(st, seqs)
+
+        if self.watchdog_s is not None:
+            dur = self.clock() - t_start
+            if dur > self.watchdog_s:
+                self._m_slow.inc()
+                obs.instant("serve.watchdog.slow_pass", dur_s=dur,
+                            budget_s=self.watchdog_s)
 
         if st.tokens:
             self.tokens_emitted += st.tokens
@@ -281,12 +379,61 @@ class ContinuousBatcher:
             self._m_pass.inc()
 
             drained = rex.drain() if boundary else None
+            skip = (self._heal_lanes(rex, seqs)
+                    if drained is not None and self.fault_model is not None
+                    else set())
             t_emit = self.clock()
             for slot, seq in seqs:
+                if slot in skip:
+                    continue
                 val = int(drained[slot]) if slot in boundary else None
                 tok = seq.advance_resident(val)
                 if tok is not None:
                     self._note_token(st, slot, seq, t_emit)
+
+    def _heal_lanes(self, rex, seqs) -> set:
+        """Post-drain self-healing: every lane the executable could not
+        recover restarts its sequence's current token stream (the fresh
+        mask rebuilds the accumulator next pass); a lane that stays
+        unrecovered ``lane_fail_threshold`` drains in a row is a stuck
+        fault replay cannot beat — quarantine it and remap its sequence
+        to a spare slot (or park it until one frees). Returns the slots
+        whose sequences must not advance on this (corrupt) drain."""
+        unrec = np.asarray(rex.unrecovered, dtype=bool)
+        self._lane_fails[~unrec] = 0
+        if not unrec.any():
+            return set()
+        skip = set()
+        by_slot = dict(seqs)
+        for slot in np.flatnonzero(unrec):
+            slot = int(slot)
+            self._lane_fails[slot] += 1
+            seq = by_slot.get(slot)
+            if seq is not None:
+                skip.add(slot)
+                seq.restart_stream()
+                self._m_restart.inc()
+                obs.instant("serve.fault.restart", rid=seq.req.rid,
+                            slot=slot, fails=int(self._lane_fails[slot]))
+            if self._lane_fails[slot] < self.lane_fail_threshold:
+                continue
+            # Persistently failing: quarantine the lane, spare the work.
+            self._bad_slots.add(slot)
+            rex.quarantine([slot])
+            self._m_quar.inc()
+            self._g_quar.set(len(self._bad_slots))
+            obs.instant("serve.quarantine", slot=slot,
+                        lanes=len(self._bad_slots))
+            if seq is not None:
+                self.slots[slot] = None
+                j = self._free_slot()
+                if j is not None:
+                    self.slots[j] = seq
+                    obs.instant("serve.remap", rid=seq.req.rid, slot=j)
+                else:
+                    self._displaced.append(seq)
+                    self._m_disp.inc()
+        return skip
 
     def _step_roundtrip(self, st: StepStats, seqs) -> None:
         """Co-scheduled round-trip passes (the PR7 path): marshal every
@@ -332,12 +479,38 @@ class ContinuousBatcher:
                 self._m_pass.inc()
 
                 # Scatter: fold each slot's MAC result back into its
-                # sequence and emit tokens.
+                # sequence and emit tokens. Under an active fault model
+                # each stream-boundary step first runs the cheap mod-21
+                # token checksum; a mismatch restarts the stream (bounded
+                # per request by the retry policy) instead of emitting a
+                # corrupt token.
                 t_emit = self.clock()
                 for (slot, seq), out in zip(chunk, outs):
                     s, c = self.engine.mac_accumulate(self.n, out)
-                    tok = seq.absorb(int(s[0]), int(c[0]))
+                    si, ci = int(s[0]), int(c[0])
+                    if (self.fault_model is not None
+                            and seq.steps_left == 1
+                            and not seq.check_token(si, ci)):
+                        obs.counter("faults.detected").inc()
+                        rid = seq.req.rid
+                        tries = self._tok_retries.get(rid, 0)
+                        if tries < self.retry.max_retries:
+                            self._tok_retries[rid] = tries + 1
+                            self.retry.note_retry(tries, sleep=False)
+                            seq.restart_stream()
+                            self._m_restart.inc()
+                            obs.instant("serve.fault.restart", rid=rid,
+                                        slot=slot, tries=tries + 1)
+                            continue
+                        # Bounded: give up and emit the corrupt token
+                        # (the harness's reference check counts it).
+                        self._tok_retries.pop(rid, None)
+                        self.retry.note_exhausted()
+                        obs.counter("faults.unrecovered").inc()
+                    tok = seq.absorb(si, ci)
                     if tok is not None:
+                        if self._tok_retries.pop(seq.req.rid, None):
+                            obs.counter("faults.recovered").inc()
                         self._note_token(st, slot, seq, t_emit)
 
     # ------------------------------------------------------------ drain ----

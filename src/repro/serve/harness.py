@@ -19,6 +19,7 @@ continuous/roundtrip).
 """
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Union
@@ -45,6 +46,9 @@ class LoadReport:
     steps: int = 0
     recompiles: int = 0               # compile events after warmup()
     bit_exact: bool = True            # every request matched reference
+    aborted: bool = False             # watchdog killed a stalled run
+    rejected: int = 0                 # requests shed (capacity exhausted)
+    escaped_tokens: int = 0           # corrupt tokens detection missed
     # Steady-state percentiles (us), from the obs windowed histograms —
     # the window resets once `warmup_frac` of requests finished, so
     # these exclude cold-start effects.
@@ -63,6 +67,9 @@ class LoadReport:
             "passes": self.passes,
             "recompiles": self.recompiles,
             "bit_exact": self.bit_exact,
+            "aborted": self.aborted,
+            "rejected": self.rejected,
+            "escaped_tokens": self.escaped_tokens,
             "ttft_p50_us": self.ttft_us.get("p50", 0.0),
             "ttft_p99_us": self.ttft_us.get("p99", 0.0),
             "token_p50_us": self.token_latency_us.get("p50", 0.0),
@@ -75,7 +82,8 @@ def run_load(engine, requests: List[Request], *, mode: str = "continuous",
              max_slots: Optional[int] = None, priority: str = "prefill",
              backend: Union[None, str, object] = None,
              warmup_frac: float = 0.25,
-             realtime: bool = True) -> LoadReport:
+             realtime: bool = True,
+             watchdog_s: Optional[float] = None) -> LoadReport:
     """Replay ``requests`` (a generated trace) and measure.
 
     ``mode="continuous"`` serves with continuous batching on the
@@ -87,6 +95,12 @@ def run_load(engine, requests: List[Request], *, mode: str = "continuous",
     ``realtime=False`` ignores arrival stamps and enqueues everything up
     front (pure throughput mode, used by tests to stay deterministic
     under slow CI machines).
+
+    ``watchdog_s`` arms a stall watchdog: the serve loop runs on a
+    worker thread and the harness aborts cleanly — partial stats,
+    ``aborted=True``, ``serve.watchdog.aborts`` counter — if no
+    scheduler progress (steps, passes, tokens, finishes) lands within
+    the budget. ``None`` (default) keeps the fully synchronous loop.
     """
     if mode not in ("continuous", "roundtrip", "serial"):
         raise ValueError(
@@ -94,7 +108,8 @@ def run_load(engine, requests: List[Request], *, mode: str = "continuous",
     reqs = sorted((r.fresh() for r in requests), key=lambda r: r.arrival)
     queue = RequestQueue()
     kwargs = dict(n_bits=n_bits, decode_elems=decode_elems,
-                  priority=priority, backend=backend)
+                  priority=priority, backend=backend,
+                  watchdog_s=watchdog_s)
     if mode == "serial":
         kwargs.update(max_slots=1, ladder=(1,), resident=False)
     elif mode == "roundtrip":
@@ -112,11 +127,11 @@ def run_load(engine, requests: List[Request], *, mode: str = "continuous",
 
     n = len(reqs)
     steady_at = max(1, int(warmup_frac * n)) if n else 0
-    steady_reset_done = False
+    prog = {"steps": 0, "steady_reset": False}
     pending = list(reqs)
-    steps = 0
-    with obs.span("serve.load", mode=mode, n_requests=n):
-        t0 = time.perf_counter()
+    t0 = time.perf_counter()
+
+    def serve_loop() -> None:
         while pending or not b.idle:
             now = time.perf_counter()
             elapsed = now - t0
@@ -126,34 +141,73 @@ def run_load(engine, requests: List[Request], *, mode: str = "continuous",
             else:
                 while pending:
                     queue.submit(pending.pop(0), now)
-            if b.live or len(queue):
+            if b.live or len(queue) or b._displaced:
                 b.step(now)
-                steps += 1
+                prog["steps"] += 1
             elif pending:
                 time.sleep(min(1e-3, max(0.0,
                                          pending[0].arrival - elapsed)))
-            if (not steady_reset_done
+            if (not prog["steady_reset"]
                     and len(b.finished_reqs) >= steady_at):
                 # Steady state: drop warmup samples from the windows so
                 # the reported percentiles describe the regime users at
                 # scale actually sit in.
                 for h in (b._h_ttft, b._h_tok, b._h_wait):
                     h.window(reset=True)
-                steady_reset_done = True
-        t_end = time.perf_counter()
+                prog["steady_reset"] = True
 
-    rep = LoadReport(mode=mode)
+    aborted = False
+    with obs.span("serve.load", mode=mode, n_requests=n,
+                  watchdog_s=watchdog_s):
+        if watchdog_s is None:
+            serve_loop()
+        else:
+            worker = threading.Thread(target=serve_loop, daemon=True,
+                                      name="serve-load")
+            worker.start()
+            snap = None
+            snap_t = time.perf_counter()
+            while worker.is_alive():
+                worker.join(timeout=min(0.05, watchdog_s / 4))
+                cur = (prog["steps"], b.passes, b.tokens_emitted,
+                       len(b.finished_reqs), len(b.rejected_reqs),
+                       len(queue), len(pending))
+                now = time.perf_counter()
+                if cur != snap:
+                    snap, snap_t = cur, now
+                elif now - snap_t > watchdog_s:
+                    # Stalled mid-step: abandon the worker (daemon) and
+                    # report what completed. A hung device call cannot
+                    # be interrupted from here — clean abort with
+                    # partial stats is the contract.
+                    aborted = True
+                    obs.counter("serve.watchdog.aborts").inc()
+                    obs.instant("serve.watchdog.abort", mode=mode,
+                                stalled_s=now - snap_t,
+                                steps=prog["steps"])
+                    break
+    t_end = time.perf_counter()
+
+    rep = LoadReport(mode=mode, aborted=aborted)
     rep.n_requests = len(b.finished_reqs)
     rep.n_tokens = b.tokens_emitted
     rep.wall_s = t_end - t0
     rep.tokens_per_s = (rep.n_tokens / rep.wall_s if rep.wall_s else 0.0)
     rep.passes = b.passes
-    rep.steps = steps
+    rep.steps = prog["steps"]
     rep.recompiles = engine.stats()["compiles"] - compiles0
+    rep.rejected = len(b.rejected_reqs)
+    escaped = 0
     for req in b.finished_reqs:
-        if req.tokens != reference_tokens(req, n_bits, decode_elems):
-            rep.bit_exact = False
-            break
+        want = reference_tokens(req, n_bits, decode_elems)
+        if req.tokens != want:
+            escaped += (abs(len(req.tokens) - len(want))
+                        + sum(1 for g, w in zip(req.tokens, want)
+                              if g != w))
+    if escaped:
+        rep.bit_exact = False
+        rep.escaped_tokens = escaped
+        obs.counter("faults.escaped").inc(escaped)
     rep.ttft_us = b._h_ttft.window(reset=True)
     rep.token_latency_us = b._h_tok.window(reset=True)
     rep.queue_wait_us = b._h_wait.window(reset=True)

@@ -93,6 +93,7 @@ class SequenceState:
         self._s = 0                       # carry-save accumulators
         self._c = 0
         self._e = 0                       # next element index
+        self._res21 = 0                   # running mod-21 token checksum
         self._stream = token_stream(req, 0, 0, n_bits, decode_elems)
         req.phase = "prefill"
 
@@ -123,9 +124,33 @@ class SequenceState:
         a, x = self._stream
         return a[self._e], x[self._e], self._s, self._c
 
+    def check_token(self, s: int, c: int) -> bool:
+        """Cheap drain-time checksum for the round-trip substrate: does
+        the candidate token this step would emit match the host-tracked
+        running mod-21 (mod-3 x mod-7) residue of the element stream?
+        Five bits of host state per slot instead of a full recompute;
+        a corrupt token slips through only on a 1-in-21 residue
+        collision (the harness counts those as ``faults.escaped``).
+        Call at a stream-boundary step *before* :meth:`absorb`."""
+        a, x = self._stream
+        exp = (self._res21 + a[self._e] * x[self._e]) % 21
+        return ((int(s) + int(c)) & self._mask) % 21 == exp
+
+    def restart_stream(self) -> None:
+        """Abandon the current token's partial stream and rewind to its
+        element 0 with a fresh accumulator — the recovery hook for lane
+        quarantine/remap and checksum restarts. Emitted tokens are never
+        rewound (the decode re-seed chain stays intact)."""
+        self._e = 0
+        self._s = 0
+        self._c = 0
+        self._res21 = 0
+
     def absorb(self, s: int, c: int) -> Optional[int]:
         """Fold one MAC result back in; returns the emitted token when
         this step drained the current stream, else ``None``."""
+        a, x = self._stream
+        self._res21 = (self._res21 + a[self._e] * x[self._e]) % 21
         self._s, self._c = int(s), int(c)
         self._e += 1
         if self._e < len(self._stream[0]):
@@ -158,6 +183,7 @@ class SequenceState:
         self._t += 1
         self._s = self._c = 0
         self._e = 0
+        self._res21 = 0
         if self._t >= self.req.max_new_tokens:
             self.req.phase = "finished"
             self._stream = ([], [])

@@ -11,6 +11,15 @@ is routine:
   a step slower than ``k x EMA`` marks the slowest host suspect. On TPU
   pods real detection uses the runtime's barrier timings; the interface
   here is transport-agnostic and unit-tested with simulated heartbeats.
+  Straggler and dead-host events land on ``train.straggler.*`` obs
+  counters so they show up in the same metrics dump as the serve-side
+  fault counters.
+
+Retry bookkeeping (attempt counting, backoff, ``*.retries`` /
+``*.exhausted`` counters) is delegated to the shared
+:class:`repro.faults.policy.RetryPolicy` — the same policy object the
+resident executor's replay loop and the serve batcher's restart path
+use, so every retry in the system is bounded and counted the same way.
 * **elastic_remesh** — on a shrunk/grown device set, rebuild the mesh
   with the survivors (largest (data, model) factorization that preserves
   the model-parallel degree if possible), then re-lower the step and
@@ -24,6 +33,9 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
+
+from repro import obs
+from repro.faults.policy import RetryPolicy
 
 from .checkpoint import latest_step, restore_checkpoint, save_checkpoint
 
@@ -58,15 +70,21 @@ class StragglerWatch:
         # stragglers should not poison the baseline
         if not slow:
             self.ema = self.ema_coef * self.ema + (1 - self.ema_coef) * wall_s
-        if slow and slowest_host is not None:
-            self.suspects[slowest_host] = self.suspects.get(slowest_host,
-                                                            0) + 1
+        if slow:
+            obs.counter("train.straggler.events").inc()
+            obs.instant("train.straggler", wall_s=wall_s, ema_s=self.ema,
+                        host=slowest_host)
+            if slowest_host is not None:
+                self.suspects[slowest_host] = self.suspects.get(
+                    slowest_host, 0) + 1
         return slow
 
     def dead_hosts(self, now: Optional[float] = None) -> List[int]:
         now = time.monotonic() if now is None else now
-        return [h for h, t in self.heartbeats.items()
+        dead = [h for h, t in self.heartbeats.items()
                 if now - t > self.timeout]
+        obs.gauge("train.straggler.dead_hosts").set(len(dead))
+        return dead
 
     def evict_candidates(self, strikes: int = 3) -> List[int]:
         return [h for h, n in self.suspects.items() if n >= strikes]
@@ -92,7 +110,15 @@ def elastic_remesh(devices, model_parallel: int):
 
 @dataclass
 class RetryingRunner:
-    """Checkpointed, retrying training loop driver."""
+    """Checkpointed, retrying training loop driver.
+
+    Retry accounting runs through the shared
+    :class:`repro.faults.policy.RetryPolicy` (``policy``); the legacy
+    ``max_retries`` knob builds a default zero-backoff policy when no
+    explicit one is given, preserving the original semantics: up to
+    ``max_retries`` *consecutive* failures are retried (the counter
+    resets on every successful step), the next one propagates.
+    """
 
     step_fn: Callable[..., Tuple]         # (params, opt, resid, batch) -> ...
     batch_fn: Callable[[int], Any]        # step -> device-ready batch
@@ -101,6 +127,12 @@ class RetryingRunner:
     max_retries: int = 3
     watch: StragglerWatch = field(default_factory=StragglerWatch)
     on_failure: Optional[Callable[[Exception, int], None]] = None
+    policy: Optional[RetryPolicy] = None
+
+    def __post_init__(self):
+        if self.policy is None:
+            self.policy = RetryPolicy(max_retries=self.max_retries,
+                                      scope="train.retry")
 
     def run(self, state: Tuple, start_step: int, num_steps: int,
             inject_failure: Optional[Callable[[int], None]] = None
@@ -135,8 +167,10 @@ class RetryingRunner:
                 metrics["restarts"] += 1
                 if self.on_failure:
                     self.on_failure(e, step)
-                if retries > self.max_retries:
+                if retries > self.policy.max_retries:
+                    self.policy.note_exhausted()
                     raise
+                self.policy.note_retry(retries - 1)
                 logger.warning("step %d failed (%s); restoring", step, e)
                 last = latest_step(self.ckpt_dir)
                 if last is not None:

@@ -1,0 +1,347 @@
+"""repro.faults: deterministic fault injection across backends,
+drain-time detection + bounded replay recovery, self-healing serve
+(quarantine/remap, capacity shedding, watchdog), and the shared retry
+policy."""
+import dataclasses
+import time
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core.bits import to_bits
+from repro.core.executor import run_numpy
+from repro.core.residue import residue_program
+from repro.engine import Engine, resolve_backend
+from repro.engine.backends import NumpyBackend, backend_fault_model
+from repro.faults import (FaultModel, RetryPolicy, decode_residues,
+                          get_fault_model, register_fault_model)
+from repro.serve import TrafficConfig, generate, run_load
+
+pytestmark = pytest.mark.system
+
+# Backend specs that must inject bit-identical faults for the same
+# model key: 64-bit packed numpy, unpacked numpy (cycle-at-a-time),
+# 32-bit packed jax, 32-bit packed pallas (interpret on CPU).
+FAULT_SPECS = ("numpy:faults={k}", "numpy:pack=true,faults={k}",
+               "jax:pack=true,faults={k}", "pallas:pack=true,faults={k}")
+
+
+def _counters():
+    return dict(obs.dump()["counters"])
+
+
+def _delta(before, key):
+    return _counters().get(key, 0) - before.get(key, 0)
+
+
+# ------------------------------------------------- injection parity ----
+@pytest.mark.parametrize("key", ["flip@0.003@5", "sa0@0.01@9"])
+def test_fault_masks_bit_identical_across_backends(key):
+    """Same fault key + seed => the exact same corrupted outputs on
+    every backend, packed or not, 64-bit or 32-bit words — faults are
+    drawn in word-size-independent (cycle, slot, row) space."""
+    eng = Engine()
+    n, rows = 4, 96
+    exe = eng.compile("multpim", n)
+    rng = np.random.default_rng(2)
+    batch = {"a": rng.integers(0, 1 << n, rows),
+             "b": rng.integers(0, 1 << n, rows)}
+    outs = []
+    for spec in FAULT_SPECS:
+        get_fault_model(key).reset()
+        out = exe.run(batch, backend=spec.format(k=key))
+        outs.append([int(v) for v in out["out"]])
+    assert outs[0] == outs[1] == outs[2] == outs[3]
+    if key.startswith("flip"):
+        # and the injection actually corrupted something at this rate
+        clean = exe.run(batch, backend="numpy")
+        assert outs[0] != [int(v) for v in clean["out"]]
+
+
+def test_faults_none_bit_identical_and_cache_keys_unchanged():
+    """``faults=none`` is policy, not compilation: outputs bit-identical
+    to the plain backend and not a single new program cache entry."""
+    eng = Engine()
+    n, rows = 4, 32
+    exe = eng.compile("multpim", n)
+    rng = np.random.default_rng(3)
+    batch = {"a": rng.integers(0, 1 << n, rows),
+             "b": rng.integers(0, 1 << n, rows)}
+    base = exe.run(batch, backend="jax:pack=true")
+    keys0 = set(eng.cache._entries)
+    out = exe.run(batch, backend="jax:pack=true,faults=none")
+    assert [int(v) for v in base["out"]] == [int(v) for v in out["out"]]
+    assert set(eng.cache._entries) == keys0
+    assert backend_fault_model(
+        resolve_backend("jax:pack=true,faults=none")) is None
+    assert backend_fault_model(resolve_backend("jax:pack=true")) is None
+
+
+# --------------------------------------------------- model semantics ----
+def test_fault_model_determinism_drift_and_pass_counter():
+    m = FaultModel(key="t-det", seed=3, p_flip=0.01)
+    a = m.flip_events(0, 40, 8, 64)
+    b = m.flip_events(0, 40, 8, 64)
+    assert all(np.array_equal(x, y) for x, y in zip(a, b))
+    c = m.flip_events(1, 40, 8, 64)
+    assert not all(np.array_equal(x, y) for x, y in zip(a, c))
+    # monotone pass counter; reset rewinds it (replay determinism)
+    assert [m.next_pass() for _ in range(3)] == [0, 1, 2]
+    m.reset()
+    assert m.next_pass() == 0
+
+    d = FaultModel(key="t-drift", seed=5, p_sa0=0.02,
+                   drift_every=4, drift_p=0.05, dead_rows=(2,))
+    sa0_e0, sa1_e0 = d.stuck_bits(64, 10, epoch=0)
+    sa0_e3, _ = d.stuck_bits(64, 10, epoch=3)
+    # drift strictly grows the stuck-at-0 set; sa1 yields to sa0
+    assert np.all(sa0_e3[sa0_e0])
+    assert sa0_e3.sum() > sa0_e0.sum()
+    assert not np.any(sa1_e0 & sa0_e0)
+    assert np.all(sa0_e0[2, :])                  # dead row pinned
+    assert d.epoch(0) == 0 and d.epoch(7) == 1 and d.epoch(8) == 2
+
+
+def test_compact_spec_registry_shares_pass_counter():
+    m1 = get_fault_model("flip@0.5@77")
+    m2 = get_fault_model("flip@0.5@77")
+    assert m1 is m2                              # one counter per key
+    assert get_fault_model("none") is None
+    assert get_fault_model("") is None
+    with pytest.raises(KeyError):
+        get_fault_model("bogus@1")
+
+
+# ---------------------------------------------------------- detection ----
+def test_residue_program_mod3_mod7():
+    """The compiled residue check reduces the carry-save state mod 3 and
+    mod 7 (up to the documented non-canonical EAC representations)."""
+    n = 4
+    prog = residue_program(n)
+    rng = np.random.default_rng(4)
+    sh = rng.integers(0, 1 << n, 32)
+    ch = rng.integers(0, 1 << n, 32)
+    lo = rng.integers(0, 1 << n, 32)
+    out = run_numpy(prog, {"s_hi": to_bits(sh, n), "c_hi": to_bits(ch, n),
+                           "lo": to_bits(lo, n)})
+    r3, r7 = decode_residues(
+        np.concatenate([out["r3"], out["r7"]], axis=1))
+    want = (((sh + ch) % (1 << n)) << n) + lo
+    assert np.array_equal(r3, want % 3)
+    assert np.array_equal(r7, want % 7)
+
+
+def test_resident_detects_and_replays_injected_corruption():
+    """Deterministic corruption of a lane's accumulator columns is
+    caught at drain and repaired by replay — other lanes untouched."""
+    eng = Engine("numpy:pack=true")
+    n, rows = 8, 4
+    rex = eng.resident(n, rows=rows, detect=True)
+    rng = np.random.default_rng(6)
+    shadow = np.zeros(rows, dtype=object)
+    for step in range(4):
+        a = rng.integers(0, 40, rows)
+        b = rng.integers(0, 40, rows)
+        rex.step(a, b, fresh=None if step == 0 else
+                 np.zeros(rows, dtype=bool))
+        shadow += a.astype(object) * b.astype(object)
+    # Corrupt lane 1's accumulator state on the device directly.
+    dev = np.asarray(rex._dev).copy()
+    cols = list(rex.index.slo_cols)[:3]
+    dev[0, cols] ^= np.uint64(1 << 1)
+    rex._dev = dev
+    c0 = _counters()
+    got = [int(v) for v in rex.drain()]
+    assert got == [int(v) for v in shadow]
+    assert not rex.unrecovered.any()
+    assert _delta(c0, "faults.detected") >= 1
+    assert _delta(c0, "faults.recovered") >= 1
+
+
+def test_resident_dead_row_flags_unrecovered_lane_only():
+    register_fault_model(FaultModel(key="t-dead1", dead_rows=(2,)))
+    eng = Engine("numpy:pack=true,faults=t-dead1")
+    n, rows = 8, 4
+    rex = eng.resident(n, rows=rows)           # detect auto-on
+    rng = np.random.default_rng(7)
+    shadow = np.zeros(rows, dtype=object)
+    for step in range(3):
+        a = rng.integers(1, 30, rows)
+        b = rng.integers(1, 30, rows)
+        rex.step(a, b, fresh=None if step == 0 else
+                 np.zeros(rows, dtype=bool))
+        shadow += a.astype(object) * b.astype(object)
+    got = [int(v) for v in rex.drain()]
+    assert list(rex.unrecovered) == [False, False, True, False]
+    for r in (0, 1, 3):
+        assert got[r] == int(shadow[r])
+
+
+# ------------------------------------------------- self-healing serve ----
+def _traffic(n_requests=8, seed=0):
+    return generate(TrafficConfig(n_requests=n_requests, rate=500.0,
+                                  n_bits=8, seed=seed))
+
+
+def test_serve_dead_lane_quarantined_and_remapped_bit_exact():
+    """A persistently dead lane is restarted once, then quarantined and
+    its sequence remapped to a healthy slot — every request still emits
+    the reference tokens, with zero recompiles and nothing rejected."""
+    register_fault_model(FaultModel(key="t-dead3", dead_rows=(3,)))
+    eng = Engine("numpy:pack=true,faults=t-dead3")
+    c0 = _counters()
+    rep = run_load(eng, _traffic(), max_slots=8, realtime=False)
+    assert rep.bit_exact and rep.escaped_tokens == 0
+    assert rep.rejected == 0 and not rep.aborted
+    assert rep.recompiles == 0
+    assert _delta(c0, "serve.fault.quarantined") >= 1
+    assert _delta(c0, "serve.fault.restarts") >= 1
+
+
+def test_serve_all_lanes_dead_rejects_cleanly():
+    """Capacity exhausted by quarantine: every request is shed with a
+    clear rejection instead of hanging or crashing."""
+    register_fault_model(
+        FaultModel(key="t-deadall", dead_rows=(0, 1, 2, 3)))
+    eng = Engine("numpy:pack=true,faults=t-deadall")
+    c0 = _counters()
+    rep = run_load(eng, _traffic(), max_slots=4, realtime=False)
+    assert rep.n_requests == 0                  # nothing finished
+    assert rep.rejected == len(_traffic())
+    assert not rep.aborted
+    assert _delta(c0, "serve.rejected") == rep.rejected
+    assert _delta(c0, "serve.fault.quarantined") == 4
+
+
+def test_serve_transient_faults_recovered_bit_exact():
+    """Seeded transient flips on the packed jax resident path: detected,
+    replay-recovered, and the emitted tokens stay bit-exact with zero
+    steady-state recompiles (the CI fault-matrix invariant)."""
+    key = "flip@5e-5@0"
+    get_fault_model(key).reset()
+    eng = Engine(f"jax:pack=true,faults={key}")
+    c0 = _counters()
+    rep = run_load(eng, _traffic(12), max_slots=8, realtime=False)
+    assert rep.bit_exact and rep.escaped_tokens == 0
+    assert rep.recompiles == 0
+    assert _delta(c0, "faults.injected") > 0
+
+
+def test_serve_watchdog_aborts_hung_backend():
+    """A hung device call trips the stall watchdog: the harness aborts
+    cleanly with partial stats instead of hanging the caller."""
+    @dataclasses.dataclass(frozen=True)
+    class HangingBackend(NumpyBackend):
+        def run_state(self, *a, **kw):
+            time.sleep(5.0)
+            return super().run_state(*a, **kw)
+
+    eng = Engine(HangingBackend())
+    c0 = _counters()
+    t0 = time.perf_counter()
+    rep = run_load(eng, _traffic(2), mode="roundtrip", max_slots=2,
+                   realtime=False, watchdog_s=0.5)
+    assert rep.aborted
+    assert time.perf_counter() - t0 < 4.0       # did not wait out the hang
+    assert _delta(c0, "serve.watchdog.aborts") == 1
+
+
+# ------------------------------------------------- retry unification ----
+def test_retry_policy_bounded_and_counted():
+    p = RetryPolicy(max_retries=2, scope="t.retry")
+    assert p.max_attempts == 3
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("boom")
+        return "ok"
+
+    c0 = _counters()
+    assert p.run(flaky) == "ok"
+    assert calls["n"] == 3
+    assert _delta(c0, "t.retry.retries") == 2
+
+    c0 = _counters()
+    with pytest.raises(RuntimeError):
+        p.run(lambda: (_ for _ in ()).throw(RuntimeError("always")))
+    assert _delta(c0, "t.retry.retries") == 2
+    assert _delta(c0, "t.retry.exhausted") == 1
+    # deterministic backoff schedule (no jitter)
+    b = RetryPolicy(max_retries=3, backoff_s=0.5, backoff_mult=2.0)
+    assert [b.delay_s(i) for i in range(3)] == [0.5, 1.0, 2.0]
+
+
+def test_retrying_runner_delegates_to_shared_policy():
+    from repro.train.fault import RetryingRunner
+    r = RetryingRunner(step_fn=lambda *a: None, batch_fn=lambda s: None,
+                       ckpt_dir="/nonexistent", max_retries=5)
+    assert isinstance(r.policy, RetryPolicy)
+    assert r.policy.max_retries == 5
+    assert r.policy.scope == "train.retry"
+    custom = RetryPolicy(max_retries=1, scope="t.train")
+    r2 = RetryingRunner(step_fn=lambda *a: None, batch_fn=lambda s: None,
+                        ckpt_dir="/nonexistent", policy=custom)
+    assert r2.policy is custom
+
+
+def test_straggler_watch_counts_into_obs():
+    from repro.train.fault import StragglerWatch
+    w = StragglerWatch(slow_factor=2.0)
+    c0 = _counters()
+    assert not w.observe_step(1.0)              # seeds the EMA
+    assert w.observe_step(10.0, slowest_host=4)
+    assert _delta(c0, "train.straggler.events") == 1
+    w.heartbeat(0, t=0.0)
+    assert w.dead_hosts(now=1000.0) == [0]
+    assert obs.dump()["gauges"].get("train.straggler.dead_hosts") == 1
+
+
+# --------------------------------------------- device-layer failover ----
+def test_coord_allocator_blocklist_failover():
+    from repro.device.config import (CoordAllocator, DeviceCapacityError,
+                                     DeviceConfig)
+    dev = DeviceConfig.parse("1x1x1x4")
+    al = CoordAllocator(dev)
+    assert al.n_free == 4
+    al.block("ch0.bg0.b0.x1")
+    assert al.n_free == 3
+    coords = [al.place(f"g{i}") for i in range(3)]
+    assert [c.crossbar for c in coords] == [0, 2, 3]   # x1 skipped
+    with pytest.raises(DeviceCapacityError, match="1 blocked"):
+        al.place("overflow")
+
+
+def test_plan_block_sheds_on_capacity():
+    from repro.configs import get_config
+    from repro.device.config import (CoordAllocator, DeviceCapacityError,
+                                     DeviceConfig)
+    from repro.pim import plan_block
+    cfg = dataclasses.replace(get_config("gemma2-9b", smoke=True),
+                              pim_linear_mode="pim", pim_linear_bits=8,
+                              pim_block_mode="full")
+    eng = Engine()
+    dev = DeviceConfig.parse("1x1x1x1")
+    with pytest.raises(DeviceCapacityError):      # default policy raises
+        plan_block(cfg, eng, placer=CoordAllocator(dev).place)
+    c0 = _counters()
+    plan = plan_block(cfg, eng, placer=CoordAllocator(dev).place,
+                      on_capacity="shed")
+    assert len(plan.groups) == 1                  # head fits
+    assert len(plan.shed) == 2                    # ffn + attn shed
+    assert _delta(c0, "plan.capacity_shed") == 2
+    assert "SHED" in plan.summary()
+
+
+def test_device_capacity_with_spares():
+    from repro.device.config import DeviceConfig
+    from repro.device.cost import DeviceCostReport
+    rep = DeviceCostReport(device=DeviceConfig(), tokens=1,
+                           crit_cycles=1000)
+    base = rep.capacity(4 * rep.tokens_per_sec)
+    assert base == 4
+    assert rep.capacity(4 * rep.tokens_per_sec, spare_frac=0.25) == 6
+    with pytest.raises(ValueError):
+        rep.capacity(1.0, spare_frac=1.0)
